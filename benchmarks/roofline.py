@@ -1,0 +1,51 @@
+"""Table 7 analogue (§Roofline): reads results/dryrun.json (compile status +
+memory analysis) and results/costs.json (decomposed per-device roofline
+terms) and prints the per-cell table."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _load(name):
+    path = os.path.join(RESULTS, name)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def run() -> list:
+    rows = []
+    dry = _load("dryrun.json")
+    costs = {(r["arch"], r["shape"], r["mesh"]): r for r in _load("costs.json")}
+    ok = sk = er = 0
+    for r in dry:
+        tag = f"dryrun.{r['arch']}.{r['shape']}.{r['mesh']}"
+        if r.get("status") == "ok":
+            ok += 1
+            mem = r.get("memory", {})
+            gb = (mem.get("argument_size_in_bytes", 0)
+                  + mem.get("temp_size_in_bytes", 0)) / 2 ** 30
+            note = f"compile {r.get('compile_s')}s; {gb:.1f} GiB/device"
+            c = costs.get((r["arch"], r["shape"], r["mesh"]))
+            if c and c.get("status") == "ok":
+                rl = c["roofline"]
+                note += (f"; comp {rl['t_compute_s']:.3g}s mem "
+                         f"{rl['t_memory_s']:.3g}s coll "
+                         f"{rl['t_collective_s']:.3g}s → {rl['bottleneck']}")
+                rows.append((tag, round(rl.get("roofline_fraction") or 0, 4),
+                             note))
+            else:
+                rows.append((tag, "ok", note))
+        elif r.get("status") == "skipped":
+            sk += 1
+            rows.append((tag, "skipped", r.get("reason", "")[:60]))
+        else:
+            er += 1
+            rows.append((tag, "ERROR", r.get("error", "")[:80]))
+    rows.append(("dryrun.summary", f"{ok}ok/{sk}skip/{er}err",
+                 "see EXPERIMENTS.md §Dry-run / §Roofline"))
+    return rows

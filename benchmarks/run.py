@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper table. Prints
+``name,value,notes`` CSV. Usage: PYTHONPATH=src python -m benchmarks.run
+[--only complexity|alignment|memory|kernels|roofline]"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (alignment, complexity, kernel_bench,
+                            memory_table, roofline)
+    suites = {
+        "complexity": complexity.run,      # Table 5
+        "memory": memory_table.run,        # Table 2
+        "alignment": alignment.run,        # Table 6
+        "kernels": kernel_bench.run,       # kernel micro/model bench
+        "roofline": roofline.run,          # Table 7 analogue (§Roofline)
+    }
+    print("name,value,notes")
+    failures = 0
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            for row in fn():
+                tag, value, note = row
+                print(f"{tag},{value},\"{note}\"")
+        except Exception as e:                              # noqa: BLE001
+            failures += 1
+            print(f"{name}.ERROR,{type(e).__name__},\"{e}\"")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

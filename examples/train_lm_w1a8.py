@@ -1,0 +1,60 @@
+"""LM QAT training with checkpoint/restart — the fault-tolerance loop.
+
+Trains a reduced W1A8 LM, simulates a preemption mid-run, then resumes from
+the checkpoint and finishes (loss continues from where it left off).
+
+Run: PYTHONPATH=src python examples/train_lm_w1a8.py [--arch chatglm3-6b]
+"""
+import argparse
+import os
+import tempfile
+
+import jax
+
+from repro import ckpt as ckpt_lib
+from repro import configs
+from repro.data import pipeline as data
+from repro.models.transformer import init_lm_params
+from repro.optim import adamw
+from repro.optim.schedules import cosine_schedule
+from repro.train.loop import run_train
+from repro.train.step import make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="chatglm3-6b")
+ap.add_argument("--steps", type=int, default=40)
+args = ap.parse_args()
+
+cfg = configs.get_reduced(args.arch)
+opt = adamw(cosine_schedule(3e-3, 4, args.steps))
+step_fn = jax.jit(make_train_step(cfg, opt, remat=False, microbatches=2))
+ds = data.make_lm_dataset(cfg.vocab_size, 16, 8)
+
+
+def batch_fn(i):
+    t, l = data.lm_batch(ds, i)
+    return {"tokens": t, "labels": l}
+
+
+ckpt_dir = os.path.join(tempfile.mkdtemp(), "ckpt")
+params = init_lm_params(jax.random.PRNGKey(0), cfg)
+state = opt[0](params)
+
+half = args.steps // 2
+print(f"phase 1: train to step {half}, then 'preempt'…")
+params, state, n = run_train(train_step=step_fn, params=params,
+                             opt_state=state, batch_fn=batch_fn, steps=half,
+                             ckpt_dir=ckpt_dir, ckpt_every=10,
+                             async_ckpt=True)
+last = ckpt_lib.latest_step(ckpt_dir)
+print(f"checkpointed at step {last}; simulating restart…")
+
+template = {"params": params, "opt_state": state}
+restored, meta = ckpt_lib.restore_checkpoint(ckpt_dir, last, template)
+print(f"phase 2: resume from step {last} (ckpt loss "
+      f"{meta.get('loss', float('nan')):.4f}) → {args.steps}")
+run_train(train_step=step_fn, params=restored["params"],
+          opt_state=restored["opt_state"], batch_fn=batch_fn,
+          steps=args.steps, start_step=last, ckpt_dir=ckpt_dir,
+          ckpt_every=10)
+print("restart e2e OK")

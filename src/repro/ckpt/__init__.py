@@ -1,0 +1,4 @@
+"""Fault-tolerant checkpointing: atomic manifests, async writes, elastic
+restore (reshard onto a different mesh at load)."""
+from repro.ckpt.checkpoint import (latest_step, restore_checkpoint,  # noqa
+                                   save_checkpoint, wait_for_async)

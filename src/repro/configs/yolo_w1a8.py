@@ -1,0 +1,11 @@
+"""The paper's own model: W1A8 YOLOv3-tiny-like detector (Table 1).
+
+320×320×3 → 10×10×75; Conv1/Conv11 fixed-point standard conv, Conv2–10
+W1A8. Structure lives in repro.models.yolo (YOLO_LAYERS); this config file
+exists so ``--arch yolo-w1a8`` is selectable next to the LM archs.
+"""
+from repro.models.yolo import (GRID, INPUT_SIZE, NUM_ANCHORS, NUM_CLASSES,
+                               YOLO_LAYERS, count_gflops, count_params)
+
+NAME = "yolo-w1a8"
+LAYERS = YOLO_LAYERS

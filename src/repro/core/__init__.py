@@ -1,0 +1,7 @@
+"""Core W1A8 quantization engine — the paper's contribution as a library.
+
+Modules: quant (Eqs. 3-1..3-4 primitives), fixedpoint (Q-format, §4),
+packing (COE/BRAM analogue), w1a8 (composable layers), verify (§6.3
+alignment statistics).
+"""
+from repro.core import fixedpoint, packing, quant, verify, w1a8  # noqa: F401

@@ -1,0 +1,86 @@
+"""Q-format fixed-point conversion (paper §4).
+
+The paper's deployment converts float parameters to two's-complement
+fixed point: Conv1 weights Q5.11 / biases Q2.14; Conv11 weights Q1.15 /
+biases Q4.12; the detection head emits signed Q*.15 (int32 / 2^15).
+A Qm.n value occupies (1 sign + m integer + n fraction) bits.
+
+All arithmetic here is integer-exact: a QFormat carries values as int32
+"raw" integers; `to_float` divides by 2^frac. This mirrors the RTL datapath
+so `core/verify.py` can reproduce the paper's Table-6 statistics.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import round_half_away
+
+
+@dataclasses.dataclass(frozen=True)
+class QFormat:
+    """Two's-complement Qm.n: 1 sign bit, `int_bits` integer, `frac_bits` frac."""
+    int_bits: int
+    frac_bits: int
+    signed: bool = True
+
+    @property
+    def total_bits(self) -> int:
+        return (1 if self.signed else 0) + self.int_bits + self.frac_bits
+
+    @property
+    def scale(self) -> int:
+        return 1 << self.frac_bits
+
+    @property
+    def raw_min(self) -> int:
+        return -(1 << (self.int_bits + self.frac_bits)) if self.signed else 0
+
+    @property
+    def raw_max(self) -> int:
+        return (1 << (self.int_bits + self.frac_bits)) - 1
+
+    def quantize(self, x: jax.Array) -> jax.Array:
+        """float → int32 raw value, saturating (matches RTL saturation)."""
+        raw = round_half_away(jnp.asarray(x, jnp.float64 if x.dtype == jnp.float64
+                                          else jnp.float32) * self.scale)
+        return jnp.clip(raw, self.raw_min, self.raw_max).astype(jnp.int32)
+
+    def to_float(self, raw: jax.Array) -> jax.Array:
+        return raw.astype(jnp.float32) / self.scale
+
+    def roundtrip(self, x: jax.Array) -> jax.Array:
+        """Quantization the RTL would apply, back in float (max err 2^-n-1)."""
+        return self.to_float(self.quantize(x))
+
+    def __str__(self) -> str:  # "Q5.11" / "UQ0.8"
+        return f"{'Q' if self.signed else 'UQ'}{self.int_bits}.{self.frac_bits}"
+
+
+# Formats used by the paper (Table 3).
+CONV1_W = QFormat(5, 11)          # Q5.11
+CONV1_B = QFormat(2, 14)          # Q2.14
+CONV11_W = QFormat(1, 15)         # Q1.15
+CONV11_B = QFormat(4, 12)         # Q4.12
+INPUT_Q = QFormat(0, 8, signed=False)   # RGB in Q0.8 ([0,255]/256)
+HEAD_OUT = QFormat(16, 15)        # signed int32 with 15 fractional bits
+SCALE_Q = QFormat(0, 16, signed=False)  # per-channel Mul/Div fixed-point scales
+
+
+def fixed_mul_rshift(x, mul_raw, frac_bits: int):
+    """Integer multiply + rounding right-shift: round_half_away((x*m) / 2^f).
+
+    The RTL post-processing primitive. **numpy int64** (bit-exact golden path —
+    JAX defaults to 32-bit so the exact pipeline runs in numpy; the fast
+    JAX/Pallas path uses float32 scales instead and is *verified against* this).
+    """
+    import numpy as np
+    prod = np.asarray(x, np.int64) * np.asarray(mul_raw, np.int64)
+    half = np.int64(1) << (frac_bits - 1)
+    # round half away from zero: floor((p + half) / 2^f) for p>=0,
+    # -floor((-p + half) / 2^f) for p<0  (symmetric rounding like the RTL).
+    mag = np.abs(prod)
+    rounded = (mag + half) >> frac_bits
+    return (np.sign(prod) * rounded).astype(np.int64)

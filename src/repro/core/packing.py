@@ -1,0 +1,91 @@
+"""1-bit weight packing — the TPU analogue of the paper's COE/BRAM ROM flow (§4).
+
+The FPGA flow packs binary weight signs into COE files loaded into BRAM ROMs
+in RTL address order. Here the deployed artifact is a bit-packed ``uint32``
+array in HBM: bit j of word k along the packed axis holds the sign of weight
+index ``32*k + j`` (1 ⇒ +1, 0 ⇒ −1, sign(0)=+1 per Eq. 3-1's RTL convention).
+
+Packing is along the *reduction* (input-channel) axis so a Pallas kernel tile
+``(bk/32, bn)`` unpacks to a ``(bk, bn)`` ±1 operand entirely in VMEM.
+
+Storage: 1 bit/weight = 1/16 of bf16, 1/8 of int8 — this is where the paper's
+"1/32 of 32-bit storage" claim lands on TPU (HBM capacity + bandwidth).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PACK = 32  # signs per uint32 word
+
+
+def packed_dim(k: int) -> int:
+    return (k + PACK - 1) // PACK
+
+
+def pack_signs(w: jax.Array, axis: int = 0) -> jax.Array:
+    """Pack sign bits of ``w`` along ``axis`` into uint32 (bit=1 ⇔ w>=0).
+
+    w: float or ±1 array. Returns uint32 array with shape[axis] = ceil(K/32).
+    K must be padded to a multiple of 32 by the caller for kernel use
+    (pad with +1 signs and zero Mul_prev scales so padding contributes 0).
+    """
+    w = jnp.moveaxis(jnp.asarray(w), axis, 0)
+    k = w.shape[0]
+    kp = packed_dim(k) * PACK
+    bits = (w >= 0).astype(jnp.uint32)
+    if kp != k:
+        pad = jnp.ones((kp - k,) + w.shape[1:], jnp.uint32)
+        bits = jnp.concatenate([bits, pad], axis=0)
+    bits = bits.reshape((kp // PACK, PACK) + bits.shape[1:])
+    shifts = jnp.arange(PACK, dtype=jnp.uint32).reshape((1, PACK) + (1,) * (bits.ndim - 2))
+    words = jnp.sum(bits << shifts, axis=1, dtype=jnp.uint32)
+    return jnp.moveaxis(words, 0, axis)
+
+
+def unpack_signs(words: jax.Array, k: int, axis: int = 0,
+                 dtype=jnp.int8) -> jax.Array:
+    """Inverse of pack_signs: uint32 words → ±1 values (length k along axis)."""
+    words = jnp.moveaxis(jnp.asarray(words, jnp.uint32), axis, 0)
+    shifts = jnp.arange(PACK, dtype=jnp.uint32).reshape((1, PACK) + (1,) * (words.ndim - 1))
+    bits = (words[:, None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape((-1,) + words.shape[1:])[:k]
+    signs = (flat.astype(jnp.int32) * 2 - 1).astype(dtype)
+    return jnp.moveaxis(signs, 0, axis)
+
+
+# ---------------------------------------------------------------------------
+# Deployment artifact (the COE-file analogue): a directory of .npy blobs +
+# a manifest, written in ROM (kernel) layout order.
+# ---------------------------------------------------------------------------
+
+def export_packed_layer(path, name: str, *, weight: np.ndarray,
+                        mul_prev: np.ndarray, div_current: np.ndarray,
+                        bias: np.ndarray) -> dict:
+    """Write one W1A8 layer's deployment blobs; returns the manifest entry.
+
+    weight: (K, N) float → packed (K/32, N) uint32 (reduction-major, kernel order)
+    mul_prev: (K,) f32; div_current/bias: (N,) f32.
+    """
+    import os
+    os.makedirs(path, exist_ok=True)
+    packed = np.asarray(pack_signs(jnp.asarray(weight), axis=0))
+    blobs = {"w_packed": packed.astype(np.uint32),
+             "mul_prev": np.asarray(mul_prev, np.float32),
+             "div_current": np.asarray(div_current, np.float32),
+             "bias": np.asarray(bias, np.float32)}
+    entry = {"name": name, "k": int(weight.shape[0]), "n": int(weight.shape[1])}
+    for key, arr in blobs.items():
+        fn = f"{name}.{key}.npy"
+        np.save(os.path.join(path, fn), arr)
+        entry[key] = {"file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+    return entry
+
+
+def load_packed_layer(path, entry: dict) -> dict:
+    import os
+    out = {}
+    for key in ("w_packed", "mul_prev", "div_current", "bias"):
+        out[key] = np.load(os.path.join(path, entry[key]["file"]))
+    return out

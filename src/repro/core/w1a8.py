@@ -1,0 +1,120 @@
+"""W1A8 layers — the paper's technique as a composable JAX module.
+
+Generalizes the paper's scheme from CNN channels to arbitrary feature axes:
+  * body matmuls use 1-bit weights (sign + STE) and uint8 LSQ activations,
+  * per-*input*-channel scale (``Mul_prev`` = the input quantizer's step,
+    optionally channel-wise) is fused into the accumulation (Eq. 3-4),
+  * per-*output*-channel scale (``Div_current`` = XNOR-style α = mean|w| per
+    output channel, folded with the next quant step at deployment) + bias run
+    in the epilogue,
+  * first/last layers (embedding / lm_head — the Conv1/Conv11 analogue) stay
+    high precision.
+
+Three execution paths share one algebra:
+  train   — fake-quant QAT (differentiable, STE + LSQ),
+  infer   — packed 1-bit weights unpacked via jnp (pjit-friendly),
+  kernel  — Pallas ``w1a8_matmul`` (VMEM-tiled, fused prologue/epilogue).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.quant import (ACT_QMAX, binarize_ste, binarize_weight,
+                              lsq_fake_quant, lsq_grad_scale, quantize_act)
+
+
+def init_w1a8_linear(key: jax.Array, k: int, n: int, *,
+                     per_channel_step: bool = True,
+                     dtype=jnp.float32) -> dict:
+    """Latent params for one W1A8 linear layer (training representation)."""
+    w = jax.random.normal(key, (k, n), dtype) * (1.0 / jnp.sqrt(k))
+    step = jnp.full((k,) if per_channel_step else (), 0.05, dtype)
+    return {"w": w, "act_step": step, "bias": jnp.zeros((n,), dtype)}
+
+
+def _alpha(w: jax.Array) -> jax.Array:
+    """XNOR-Net per-output-channel weight scale α_o = mean_i |w_io| (detached)."""
+    return jax.lax.stop_gradient(jnp.mean(jnp.abs(w), axis=0))
+
+
+def w1a8_linear_train(params: dict, x: jax.Array) -> jax.Array:
+    """QAT forward: LSQ fake-quant input → ±1 (STE) matmul → α, bias epilogue."""
+    gs = lsq_grad_scale(x.size // max(x.shape[-1], 1))
+    xq = lsq_fake_quant(x, params["act_step"], jnp.asarray(gs, x.dtype))
+    wb = binarize_ste(params["w"])
+    y = xq @ wb
+    return y * _alpha(params["w"]) + params["bias"]
+
+
+def w1a8_linear_float_ref(params: dict, x: jax.Array) -> jax.Array:
+    """Eval-mode float reference (no STE machinery) — the 'ONNX' oracle."""
+    xq = quantize_act(x, params["act_step"]) * params["act_step"]
+    return (xq @ binarize_weight(params["w"])) * _alpha(params["w"]) + params["bias"]
+
+
+# ---------------------------------------------------------------------------
+# Deployment: pack to 1-bit + scale split (the parameter-extraction step, §4)
+# ---------------------------------------------------------------------------
+
+def deploy_w1a8_linear(params: dict) -> dict:
+    """Training params → deployed artifact.
+
+    mul_prev    (K,) f32 — input quant steps (channel-wise Mul_prev)
+    w_packed    (K/32, N) uint32 — sign bits, reduction-major
+    div_post    (N,) f32 — α_o (output-channel scale; at graph-assembly time the
+                 *next* layer's quant step is folded in, mirroring Div_current)
+    bias        (N,) f32
+    """
+    w = params["w"]
+    k = w.shape[0]
+    step = jnp.broadcast_to(params["act_step"], (k,)).astype(jnp.float32)
+    return {
+        "w_packed": packing.pack_signs(w, axis=0),
+        "mul_prev": step,
+        "div_post": _alpha(w).astype(jnp.float32),
+        "bias": params["bias"].astype(jnp.float32),
+        "k": k,
+    }
+
+
+def w1a8_linear_infer(deployed: dict, a_u8: jax.Array, *,
+                      compute_dtype=jnp.bfloat16) -> jax.Array:
+    """Deployed inference on quantized activations (jnp path, pjit-friendly).
+
+    a_u8: (..., K) uint8 activation codes. Returns float output
+    y = ((a ⊙ mul_prev) @ sign) * div_post + bias     (Eqs. 3-2/3-4).
+
+    The ±1 operand is unpacked from 1-bit storage *at use*: under jit the
+    unpack fuses into the matmul's producer, so HBM traffic stays ~1 bit per
+    weight — the TPU analogue of streaming COE ROMs.
+    """
+    k = deployed["k"]
+    signs = packing.unpack_signs(deployed["w_packed"], k, axis=0,
+                                 dtype=compute_dtype)
+    am = (a_u8.astype(compute_dtype) *
+          deployed["mul_prev"].astype(compute_dtype))
+    y = jax.lax.dot_general(am, signs, (((am.ndim - 1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    return y * deployed["div_post"] + deployed["bias"]
+
+
+def w1a8_linear_infer_int(deployed: dict, a_u8: jax.Array) -> jax.Array:
+    """Uniform-scale exact-integer path: a(int32) @ sign(int32) with the
+    zero-point trick (a-128 int8 + colsum correction is done in the Pallas
+    kernel; here plain int32 keeps it exact on CPU)."""
+    k = deployed["k"]
+    signs = packing.unpack_signs(deployed["w_packed"], k, axis=0, dtype=jnp.int32)
+    acc = jax.lax.dot_general(a_u8.astype(jnp.int32), signs,
+                              (((a_u8.ndim - 1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    m = deployed["mul_prev"][0]
+    return acc.astype(jnp.float32) * m * deployed["div_post"] + deployed["bias"]
+
+
+def requantize(y: jax.Array, next_step: jax.Array) -> jax.Array:
+    """Post-processing to the next layer's uint8 codes (Div_current role)."""
+    return quantize_act(y, next_step).astype(jnp.uint8)

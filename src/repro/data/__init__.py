@@ -1,0 +1,8 @@
+"""Deterministic synthetic data pipelines (offline container — no VOC/web).
+
+Stateless index-based sampling: batch(step) is a pure function of
+(seed, step, host_shard), so the pipeline "state" in a checkpoint is just
+the step counter — restart/elastic-rescale resume exactly.
+"""
+from repro.data.pipeline import (detection_batch, lm_batch,  # noqa: F401
+                                 make_detection_dataset, make_lm_dataset)

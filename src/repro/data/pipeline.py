@@ -1,0 +1,127 @@
+"""Synthetic-but-structured datasets, deterministic by (seed, step).
+
+LM:        Zipf-ish token streams with induced bigram structure so the loss
+           actually decreases (models can learn the transition table).
+Detection: images composed of colored rectangles on noise; labels are the
+           ground-truth boxes — the YOLO QAT e2e example trains on these.
+
+Both samplers are pure functions of (seed, step, shard) — no iterator state.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.yolo import GRID, INPUT_SIZE, NUM_ANCHORS, NUM_CLASSES
+
+
+@dataclasses.dataclass(frozen=True)
+class LMDataset:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+
+def make_lm_dataset(vocab_size: int, seq_len: int, global_batch: int,
+                    seed: int = 0) -> LMDataset:
+    return LMDataset(vocab_size, seq_len, global_batch, seed)
+
+
+def lm_batch(ds: LMDataset, step, *, shard: int = 0, num_shards: int = 1):
+    """→ (tokens, labels) each (global_batch/num_shards, seq_len) int32.
+
+    Token stream: x_{t+1} = (a·x_t + c_b) mod V with per-sequence phase —
+    a learnable deterministic structure (bigram table) + 10% uniform noise.
+    """
+    bsz = ds.global_batch // num_shards
+    key = jax.random.fold_in(jax.random.PRNGKey(ds.seed), step)
+    key = jax.random.fold_in(key, shard)
+    k1, k2, k3 = jax.random.split(key, 3)
+    v = ds.vocab_size
+    x0 = jax.random.randint(k1, (bsz, 1), 0, v)
+    mult = 31 % v or 1
+    offs = jax.random.randint(k2, (bsz, 1), 0, 7)
+
+    def stepf(x, _):
+        nxt = (x * mult + offs) % v
+        return nxt, nxt
+
+    _, seq = jax.lax.scan(stepf, x0, None, length=ds.seq_len)
+    seq = jnp.swapaxes(seq[..., 0], 0, 1)                   # (B, S)
+    noise = jax.random.bernoulli(k3, 0.1, seq.shape)
+    rand = jax.random.randint(jax.random.fold_in(k3, 1), seq.shape, 0, v)
+    tokens = jnp.where(noise, rand, seq).astype(jnp.int32)
+    labels = jnp.roll(tokens, -1, axis=1)
+    return tokens, labels
+
+
+@dataclasses.dataclass(frozen=True)
+class DetectionDataset:
+    global_batch: int
+    seed: int = 0
+    max_boxes: int = 4
+
+
+def make_detection_dataset(global_batch: int, seed: int = 0,
+                           max_boxes: int = 4) -> DetectionDataset:
+    return DetectionDataset(global_batch, seed, max_boxes)
+
+
+def detection_batch(ds: DetectionDataset, step, *, shard: int = 0,
+                    num_shards: int = 1):
+    """→ images (B,320,320,3) f32 in [0,1]; boxes (B,M,4) cxcywh;
+    classes (B,M) int32 (−1 = no box)."""
+    bsz = ds.global_batch // num_shards
+    key = jax.random.fold_in(jax.random.PRNGKey(ds.seed + 77), step)
+    key = jax.random.fold_in(key, shard)
+    kb, kc, kn, kcol = jax.random.split(key, 4)
+    m = ds.max_boxes
+    cx = jax.random.uniform(kb, (bsz, m), minval=0.15, maxval=0.85)
+    cy = jax.random.uniform(jax.random.fold_in(kb, 1), (bsz, m),
+                            minval=0.15, maxval=0.85)
+    w = jax.random.uniform(jax.random.fold_in(kb, 2), (bsz, m),
+                           minval=0.1, maxval=0.3)
+    h = jax.random.uniform(jax.random.fold_in(kb, 3), (bsz, m),
+                           minval=0.1, maxval=0.3)
+    boxes = jnp.stack([cx, cy, w, h], -1)
+    classes = jax.random.randint(kc, (bsz, m), 0, NUM_CLASSES)
+    present = jax.random.bernoulli(jax.random.fold_in(kc, 1), 0.8, (bsz, m))
+    classes = jnp.where(present, classes, -1)
+
+    # paint rectangles whose colour encodes the class (learnable signal)
+    yy = (jnp.arange(INPUT_SIZE) + 0.5) / INPUT_SIZE
+    xx = (jnp.arange(INPUT_SIZE) + 0.5) / INPUT_SIZE
+    inside = ((yy[None, :, None, None] > (cy - h / 2)[:, None, None, :]) &
+              (yy[None, :, None, None] < (cy + h / 2)[:, None, None, :]) &
+              (xx[None, None, :, None] > (cx - w / 2)[:, None, None, :]) &
+              (xx[None, None, :, None] < (cx + w / 2)[:, None, None, :]) &
+              present[:, None, None, :])                     # (B,H,W,M)
+    col = jnp.stack([(classes % 5).astype(jnp.float32) / 5.0 + 0.2,
+                     (classes % 7).astype(jnp.float32) / 7.0 + 0.1,
+                     (classes % 3).astype(jnp.float32) / 3.0 + 0.3], -1)
+    img = jax.random.uniform(kn, (bsz, INPUT_SIZE, INPUT_SIZE, 3)) * 0.15
+    painted = jnp.einsum("bhwm,bmc->bhwc",
+                         inside.astype(jnp.float32), jnp.clip(col, 0, 1))
+    img = jnp.clip(img + painted, 0.0, 1.0)
+    return img, boxes, classes
+
+
+def yolo_target(boxes, classes):
+    """Rasterize ground truth onto the 10×10×3-anchor grid (YOLOv3 style)."""
+    bsz, m, _ = boxes.shape
+    tgt = jnp.zeros((bsz, GRID, GRID, NUM_ANCHORS, 5 + NUM_CLASSES))
+    cell_y = jnp.clip((boxes[..., 1] * GRID).astype(jnp.int32), 0, GRID - 1)
+    cell_x = jnp.clip((boxes[..., 0] * GRID).astype(jnp.int32), 0, GRID - 1)
+    # anchor: pick by box area (small/med/large)
+    area = boxes[..., 2] * boxes[..., 3]
+    anchor = jnp.clip((area / 0.05).astype(jnp.int32), 0, NUM_ANCHORS - 1)
+    valid = classes >= 0
+    bidx = jnp.arange(bsz)[:, None].repeat(m, 1)
+    one_cls = jax.nn.one_hot(jnp.maximum(classes, 0), NUM_CLASSES)
+    rows = jnp.concatenate([boxes, jnp.ones((bsz, m, 1)), one_cls], -1)
+    rows = rows * valid[..., None]
+    tgt = tgt.at[bidx, cell_y, cell_x, anchor].add(rows)
+    return jnp.clip(tgt, 0.0, 1.0)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+w1a8_matmul — bit-packed binary-weight matmul (Mul_prev prologue fusion,
+              Div/bias/round/clip epilogue, exact-int8 zero-point variant).
+w1a8_conv   — streaming 3×3 conv, the LineBuffer_3x3/Padding-Adapter analogue.
+
+All kernels are TPU-targeted (pl.pallas_call + BlockSpec VMEM tiling) and
+validated on CPU in interpret mode against pure-jnp oracles in ref.py.
+"""
+from repro.kernels import w1a8_conv, w1a8_matmul  # noqa: F401

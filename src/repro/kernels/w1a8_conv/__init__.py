@@ -1,0 +1,2 @@
+"""W1A8 w1a8_conv kernel package."""
+from repro.kernels.w1a8_conv import kernel, ops, ref  # noqa: F401

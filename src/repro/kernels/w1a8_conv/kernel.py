@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: streaming W1A8 3×3 conv — the LineBuffer_3x3 analogue.
+
+The paper's RTL streams rows through a padding adapter + 3-row line buffer so
+each input row is fetched from external memory once (§5.2). The TPU-native
+equivalent: grid over (batch, output rows); per step the BlockSpec machinery
+stages exactly **three input row-stripes** (y−1, y, y+1 of the padded input —
+the same array passed three times with shifted index maps) into VMEM, forms
+the 3×3 windows by in-register shifts, and contracts on the MXU against ±1
+weights unpacked from 1-bit storage. Mul_prev prologue + Div/bias/round/clip
+epilogue are fused exactly as in ``w1a8_matmul``.
+
+HBM traffic per layer ≈ one read of the uint8 input + 1-bit weights + one
+write of the uint8 output — the streaming-dataflow property, ported.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.packing import PACK
+from repro.kernels.w1a8_matmul.kernel import _unpack_tile
+
+
+def _conv_kernel(rm1_ref, r0_ref, rp1_ref, wp_ref, m_ref, d_ref, b_ref,
+                 o_ref, *, w_out: int, k9p: int, cout: int,
+                 out_step: Optional[float], compute_dtype):
+    rows = [rm1_ref[0, 0], r0_ref[0, 0], rp1_ref[0, 0]]   # each (Wp, Cin)
+    # im2col for one output row: (W, 9*Cin) in (dy, dx, cin) order —
+    # the "3x3 window former" fed by the three line buffers.
+    cols = jnp.concatenate(
+        [rows[dy][dx:dx + w_out, :] for dy in range(3) for dx in range(3)],
+        axis=-1).astype(jnp.float32)                       # (W, 9Cin)
+    if cols.shape[1] < k9p:                                # K padding lanes
+        cols = jnp.pad(cols, ((0, 0), (0, k9p - cols.shape[1])))
+    am = (cols * m_ref[...].astype(jnp.float32)).astype(compute_dtype)
+    signs = _unpack_tile(wp_ref[...], k9p, cout, compute_dtype)
+    y = jnp.dot(am, signs, preferred_element_type=jnp.float32)
+    y = y * d_ref[...].astype(jnp.float32) + b_ref[...].astype(jnp.float32)
+    if out_step is None:
+        o_ref[0, 0] = y.astype(o_ref.dtype)
+    else:
+        q = jnp.trunc(y / out_step + 0.5)
+        o_ref[0, 0] = jnp.clip(q, 0, 255).astype(o_ref.dtype)
+
+
+def w1a8_conv3x3_pallas(a_pad: jax.Array, w_packed: jax.Array,
+                        mul9: jax.Array, div_post: jax.Array,
+                        bias: jax.Array, *, out_step: Optional[float] = None,
+                        compute_dtype=jnp.bfloat16,
+                        interpret: bool = False) -> jax.Array:
+    """a_pad: (B, H+2, W+2, Cin) uint8 (SAME-padded, K-padding included in
+    w/mul layout); w_packed: (K9p/32, Cout); mul9: (1, K9p) with zeros in
+    padded lanes; div_post/bias: (1, Cout). Returns (B, H, W, Cout).
+    """
+    b, hp, wp_, cin = a_pad.shape
+    h, w_out = hp - 2, wp_ - 2
+    k9p = mul9.shape[1]
+    cout = w_packed.shape[1]
+    assert w_packed.shape[0] * PACK == k9p
+    kernel = functools.partial(_conv_kernel, w_out=w_out, k9p=k9p, cout=cout,
+                               out_step=out_step, compute_dtype=compute_dtype)
+    row = lambda dy: pl.BlockSpec((1, 1, wp_, cin),
+                                  lambda bb, i, dy=dy: (bb, i + dy, 0, 0))
+    out_dtype = jnp.float32 if out_step is None else jnp.uint8
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            row(0), row(1), row(2),                         # 3 line buffers
+            pl.BlockSpec((k9p // PACK, cout), lambda bb, i: (0, 0)),
+            pl.BlockSpec((1, k9p), lambda bb, i: (0, 0)),
+            pl.BlockSpec((1, cout), lambda bb, i: (0, 0)),
+            pl.BlockSpec((1, cout), lambda bb, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, w_out, cout),
+                               lambda bb, i: (bb, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, w_out, cout), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(a_pad, a_pad, a_pad, w_packed, mul9, div_post, bias)

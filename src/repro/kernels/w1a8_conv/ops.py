@@ -1,0 +1,54 @@
+"""Jit'd public wrapper for the streaming W1A8 3×3 conv kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import PACK, pack_signs
+from repro.kernels.w1a8_conv import kernel as _k
+from repro.kernels.w1a8_conv import ref as _ref
+
+
+def conv_pack_weights(w: jax.Array) -> jax.Array:
+    """(3, 3, Cin, Cout) float → (ceil(9·Cin/32), Cout) uint32 sign words."""
+    k9 = w.shape[0] * w.shape[1] * w.shape[2]
+    return pack_signs(w.reshape(k9, w.shape[3]), axis=0)
+
+
+def conv_mul9(mul_prev: jax.Array) -> jax.Array:
+    """(Cin,) input-channel scales → (1, k9p) prologue vector (zeros pad K)."""
+    m9 = jnp.tile(mul_prev.astype(jnp.float32), 9)
+    k9 = m9.shape[0]
+    k9p = (k9 + PACK - 1) // PACK * PACK
+    return jnp.pad(m9, (0, k9p - k9)).reshape(1, k9p)
+
+
+@functools.partial(jax.jit, static_argnames=("cin", "out_step", "interpret",
+                                             "use_kernel"))
+def w1a8_conv3x3(a_u8: jax.Array, w_packed: jax.Array, mul_prev: jax.Array,
+                 div_post: jax.Array, bias: jax.Array, *, cin: int,
+                 out_step: Optional[float] = None, interpret: bool = True,
+                 use_kernel: bool = True) -> jax.Array:
+    """Streaming 3×3 SAME conv on uint8 codes.
+
+    a_u8 (B,H,W,Cin); w_packed (ceil(9Cin/32),Cout); mul_prev (Cin,);
+    div_post/bias (Cout,). Returns (B,H,W,Cout) f32, or uint8 if out_step.
+    """
+    if not use_kernel:
+        return _ref.w1a8_conv3x3_ref(
+            a_u8, w_packed, cin, mul_prev, div_post, bias,
+            None if out_step is None else jnp.float32(out_step))
+    a_pad = jnp.pad(a_u8, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    mul9 = conv_mul9(mul_prev)
+    k9p = mul9.shape[1]
+    wp = w_packed
+    if wp.shape[0] != k9p // PACK:
+        wp = jnp.pad(wp, ((0, k9p // PACK - wp.shape[0]), (0, 0)))
+    cout = wp.shape[1]
+    return _k.w1a8_conv3x3_pallas(
+        a_pad, wp, mul9, div_post.astype(jnp.float32).reshape(1, cout),
+        bias.astype(jnp.float32).reshape(1, cout),
+        out_step=out_step, interpret=interpret)

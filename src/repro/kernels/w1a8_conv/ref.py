@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the W1A8 3×3 SAME conv kernel (NHWC, stride 1).
+
+Weight layout: w (3, 3, Cin, Cout) flattened to (9·Cin, Cout) in
+(dy, dx, cin) order, matching the kernel's im2col concat order.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.quant import ACT_QMAX, round_half_away
+
+
+def im2col_3x3(x: jnp.ndarray) -> jnp.ndarray:
+    """(B, H, W, C) → (B, H, W, 9C) patches, SAME zero padding, (dy,dx,c) order."""
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    cols = [xp[:, dy:dy + h, dx:dx + w, :] for dy in range(3) for dx in range(3)]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def w1a8_conv3x3_ref(a_u8: jnp.ndarray, w_packed: jnp.ndarray, cin: int,
+                     mul_prev: jnp.ndarray, div_post: jnp.ndarray,
+                     bias: jnp.ndarray,
+                     out_step: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """a_u8 (B,H,W,Cin) uint8 codes; w_packed (ceil(9Cin/32), Cout) uint32;
+    mul_prev (Cin,); div_post/bias (Cout,)."""
+    k = 9 * cin
+    signs = packing.unpack_signs(w_packed, k, axis=0, dtype=jnp.float32)
+    cols = im2col_3x3(a_u8.astype(jnp.float32))            # (B,H,W,9Cin)
+    m9 = jnp.tile(mul_prev.astype(jnp.float32), 9)
+    y = (cols * m9) @ signs
+    y = y * div_post + bias
+    if out_step is None:
+        return y
+    return jnp.clip(round_half_away(y / out_step), 0, ACT_QMAX).astype(jnp.uint8)

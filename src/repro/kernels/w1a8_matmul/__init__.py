@@ -1,0 +1,2 @@
+"""W1A8 w1a8_matmul kernel package."""
+from repro.kernels.w1a8_matmul import kernel, ops, ref  # noqa: F401

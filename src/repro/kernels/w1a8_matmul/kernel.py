@@ -1,0 +1,155 @@
+"""Pallas TPU kernel: bit-packed W1A8 matmul with fused scale split.
+
+TPU adaptation of the paper's binary PE (§5.2):
+  * weights live in HBM as 1 bit each (uint32 words, reduction-major) and are
+    unpacked to ±1 *inside* the kernel's VMEM tiles — HBM weight traffic is
+    1/16 of bf16 (the COE/BRAM-ROM streaming analogue),
+  * ``Mul_prev`` (per-input-channel) is applied in the **prologue**, before
+    the MXU contraction — Eq. 3-4's "compensation during accumulation",
+  * ``Div_current``/bias/round/clip run in the **epilogue** on the final
+    K-step, optionally emitting uint8 codes for the next layer (the paper's
+    Post-process module, fused).
+
+Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary"); f32 accumulation in a
+VMEM scratch tile. MXU operands are bf16 (entries |m·a| ≤ 255·m exactly
+representable errs <0.4%, validated vs. ref to corr>0.99999) or, in the
+``exact`` path (uniform scale), int8 with the zero-point trick:
+  Σ_k s·a = Σ_k s·(a−128) + 128·Σ_k s   (a−128 ∈ int8, exact int32 MXU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.packing import PACK
+
+DEF_BM, DEF_BK, DEF_BN = 256, 512, 256
+
+
+def _unpack_tile(wp_tile: jax.Array, bk: int, bn: int, dtype) -> jax.Array:
+    """(bk/32, bn) uint32 → (bk, bn) ±1 in `dtype`, in VMEM."""
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (bk // PACK, PACK, bn), 1)
+    bits = (wp_tile[:, None, :] >> shifts) & jnp.uint32(1)
+    signs = bits.astype(jnp.int8) * jnp.int8(2) - jnp.int8(1)
+    return signs.reshape(bk, bn).astype(dtype)
+
+
+def _matmul_kernel(a_ref, wp_ref, m_ref, d_ref, b_ref, o_ref, acc_ref, *,
+                   nk: int, bk: int, bn: int, out_step: Optional[float],
+                   compute_dtype):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Prologue: per-input-channel Mul_prev fused before the contraction.
+    a = a_ref[...].astype(jnp.float32)            # (bm, bk) uint8 → f32
+    am = (a * m_ref[...].astype(jnp.float32)).astype(compute_dtype)
+    signs = _unpack_tile(wp_ref[...], bk, bn, compute_dtype)
+    acc_ref[...] += jnp.dot(am, signs, preferred_element_type=jnp.float32)
+
+    # Epilogue on the last K step: Div_current, bias, (round, clip).
+    @pl.when(kk == nk - 1)
+    def _epilogue():
+        y = acc_ref[...] * d_ref[...].astype(jnp.float32) \
+            + b_ref[...].astype(jnp.float32)
+        if out_step is None:
+            o_ref[...] = y.astype(o_ref.dtype)
+        else:
+            # round-half-away then clip; negatives clip to 0 so trunc(x+0.5)
+            # (exact for x ≥ -0.5) suffices.
+            q = jnp.trunc(y / out_step + 0.5)
+            o_ref[...] = jnp.clip(q, 0, 255).astype(o_ref.dtype)
+
+
+def w1a8_matmul_pallas(a_u8: jax.Array, w_packed: jax.Array,
+                       mul_prev: jax.Array, div_post: jax.Array,
+                       bias: jax.Array, *,
+                       out_step: Optional[float] = None,
+                       bm: int = DEF_BM, bk: int = DEF_BK, bn: int = DEF_BN,
+                       compute_dtype=jnp.bfloat16,
+                       interpret: bool = False) -> jax.Array:
+    """Shapes (pre-padded to tile multiples by ops.py):
+    a_u8 (M, K) uint8 · w_packed (K/32, N) uint32 · mul_prev (1, K) f32 ·
+    div_post/bias (1, N) f32 → (M, N) f32, or uint8 codes when out_step given.
+    """
+    m, k = a_u8.shape
+    n = w_packed.shape[1]
+    assert k % bk == 0 and m % bm == 0 and n % bn == 0 and bk % PACK == 0
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    kernel = functools.partial(_matmul_kernel, nk=nk, bk=bk, bn=bn,
+                               out_step=out_step, compute_dtype=compute_dtype)
+    out_dtype = jnp.float32 if out_step is None else jnp.uint8
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // PACK, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bk), lambda i, j, kk: (0, kk)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a_u8, w_packed, mul_prev, div_post, bias)
+
+
+# ---------------------------------------------------------------------------
+# Exact integer path (uniform input scale): int8 MXU + zero-point correction.
+# ---------------------------------------------------------------------------
+
+def _int_kernel(a_ref, wp_ref, cs_ref, o_ref, acc_ref, *, nk, bk, bn):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a_c = (a_ref[...].astype(jnp.int32) - 128).astype(jnp.int8)
+    signs = _unpack_tile(wp_ref[...], bk, bn, jnp.int8)
+    acc_ref[...] += jax.lax.dot_general(
+        a_c, signs, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+    @pl.when(kk == nk - 1)
+    def _fin():
+        # zero-point correction: + 128 · Σ_k sign[k, n]  (colsum, precomputed)
+        o_ref[...] = acc_ref[...] + 128 * cs_ref[...]
+
+
+def w1a8_matmul_int_pallas(a_u8: jax.Array, w_packed: jax.Array,
+                           colsum: jax.Array, *, bm: int = DEF_BM,
+                           bk: int = DEF_BK, bn: int = DEF_BN,
+                           interpret: bool = False) -> jax.Array:
+    """Exact Σ_k s·a in int32. colsum: (1, N) int32 = Σ_k sign[k, n]."""
+    m, k = a_u8.shape
+    n = w_packed.shape[1]
+    assert k % bk == 0 and m % bm == 0 and n % bn == 0
+    nk = k // bk
+    kernel = functools.partial(_int_kernel, nk=nk, bk=bk, bn=bn)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // PACK, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a_u8, w_packed, colsum)

@@ -1,0 +1,74 @@
+"""Jit'd public wrapper for the W1A8 packed matmul kernel.
+
+Handles batching (leading dims folded into M), padding to tile multiples
+(zero activations × zero mul_prev ⇒ padded K contributes exactly 0), tile
+auto-shrink for small operands, and CPU fallback (interpret mode / jnp ref).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import PACK, pack_signs
+from repro.kernels.w1a8_matmul import kernel as _k
+from repro.kernels.w1a8_matmul import ref as _ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pick(dim: int, pref: int, mult: int) -> int:
+    """Largest tile ≤ pref that keeps padding small; multiple of `mult`."""
+    if dim >= pref:
+        return pref
+    return max(mult, _round_up(dim, mult))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "out_step", "interpret",
+                                             "use_kernel"))
+def w1a8_matmul(a_u8: jax.Array, w_packed: jax.Array, mul_prev: jax.Array,
+                div_post: jax.Array, bias: jax.Array, *, k: int,
+                out_step: Optional[float] = None, interpret: bool = True,
+                use_kernel: bool = True) -> jax.Array:
+    """y = ((a ⊙ mul_prev) @ unpack(w_packed)) ⊙ div_post + bias  [+ requant].
+
+    a_u8: (..., K) uint8 codes; w_packed: (ceil(K/32), N) uint32;
+    mul_prev: (K,) f32; div_post, bias: (N,) f32.
+    """
+    if not use_kernel:
+        y = _ref.w1a8_matmul_ref(a_u8, w_packed, k, mul_prev, div_post, bias,
+                                 None if out_step is None else jnp.float32(out_step))
+        return y
+
+    lead = a_u8.shape[:-1]
+    m = 1
+    for d in lead:
+        m *= d
+    n = w_packed.shape[1]
+    a2 = a_u8.reshape(m, a_u8.shape[-1])
+
+    bm = _pick(m, 256, 8)
+    bn = _pick(n, 256, 128)
+    bk = _pick(k, 512, PACK)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+
+    a2 = jnp.pad(a2[:, :k], ((0, mp - m), (0, kp - k)))
+    mul = jnp.pad(mul_prev.astype(jnp.float32), (0, kp - k)).reshape(1, kp)
+    wp = w_packed
+    if kp // PACK != wp.shape[0] or np_ != n:
+        wp = jnp.pad(wp, ((0, kp // PACK - wp.shape[0]), (0, np_ - n)))
+    dv = jnp.pad(div_post.astype(jnp.float32), (0, np_ - n)).reshape(1, np_)
+    bs = jnp.pad(bias.astype(jnp.float32), (0, np_ - n)).reshape(1, np_)
+
+    y = _k.w1a8_matmul_pallas(a2, wp, mul, dv, bs, out_step=out_step,
+                              bm=bm, bk=bk, bn=bn, interpret=interpret)
+    return y[:m, :n].reshape(lead + (n,))
+
+
+def w1a8_pack_weights(w: jax.Array) -> jax.Array:
+    """(K, N) float → (ceil(K/32), N) uint32 sign words (deploy-time)."""
+    return pack_signs(w, axis=0)

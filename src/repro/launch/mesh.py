@@ -1,0 +1,33 @@
+"""Production mesh definitions (TPU v5e pods).
+
+Functions, not module constants — importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16)=('data','model') single pod / (2,16,16)=('pod','data','model')
+    two pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2):
+    """Small mesh over whatever devices exist (tests on CPU)."""
+    n = len(jax.devices())
+    if n < data * model:
+        data, model = 1, min(n, model)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+HW = {
+    "name": "TPU v5e",
+    "peak_flops_bf16": 197e12,      # per chip
+    "hbm_bw": 819e9,                # B/s per chip
+    "ici_bw": 50e9,                 # B/s per link (~per-direction)
+    "hbm_gib": 16,
+}

@@ -1,0 +1,98 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On a real pod this process runs per host (jax.distributed.initialize is
+called when JAX_COORDINATOR is set); in this container it runs the same
+code single-host. Supports --reduced for CPU-scale runs, checkpoint/resume,
+preemption handling, and the W1A8 QAT mode (the paper's training recipe).
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mode", default="w1a8_train",
+                    choices=["w1a8_train", "float"])
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "adafactor", "sgdm"])
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny config (CPU-scale)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the (16,16) pod mesh (needs 256 devices)")
+    args = ap.parse_args()
+
+    if args.production_mesh and "xla_force_host_platform_device_count" \
+            not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                                   "256 " + os.environ.get("XLA_FLAGS", ""))
+    if os.environ.get("JAX_COORDINATOR"):
+        import jax
+        jax.distributed.initialize()       # multi-host pod entry
+
+    import jax
+    import jax.numpy as jnp
+    from repro import configs
+    from repro.data import pipeline as data
+    from repro.models.transformer import ShardCtx, init_lm_params
+    from repro.optim import adafactor, adamw, sgdm
+    from repro.optim.schedules import cosine_schedule
+    from repro.train.loop import resume_or_init, run_train
+    from repro.train.step import make_train_step
+
+    cfg = (configs.get_reduced(args.arch) if args.reduced
+           else configs.get_config(args.arch))
+    sched = cosine_schedule(args.lr, max(args.steps // 20, 1), args.steps)
+    opt = {"adamw": adamw, "adafactor": adafactor, "sgdm": sgdm}[
+        args.optimizer](sched)
+
+    ctx = None
+    if args.production_mesh:
+        from repro.dist import sharding as shard_rules
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh()
+        ctx = ShardCtx(mesh=mesh, dp_axes=("data",), tp_axis="model",
+                       ep_axis="data" if cfg.num_experts else None)
+
+    step_fn = jax.jit(make_train_step(
+        cfg, opt, mode=args.mode, microbatches=args.microbatches, ctx=ctx,
+        remat=not args.reduced))
+
+    def init_fn():
+        params = init_lm_params(jax.random.PRNGKey(args.seed), cfg)
+        return {"params": params, "opt_state": opt[0](params)}
+
+    state, start = resume_or_init(args.ckpt_dir, init_fn)
+    ds = data.make_lm_dataset(cfg.vocab_size, args.seq_len,
+                              args.global_batch, seed=args.seed)
+
+    def batch_fn(step):
+        toks, labels = data.lm_batch(ds, step)
+        batch = {"tokens": toks, "labels": labels}
+        if cfg.family == "encdec":
+            batch["encoder_embeds"] = jax.random.normal(
+                jax.random.PRNGKey(step), (args.global_batch, args.seq_len,
+                                           cfg.d_model)) * 0.1
+        if cfg.frontend == "vision":
+            batch["prefix_embeds"] = jax.random.normal(
+                jax.random.PRNGKey(step), (args.global_batch, cfg.prefix_len,
+                                           cfg.d_model)) * 0.1
+        return batch
+
+    run_train(train_step=step_fn, params=state["params"],
+              opt_state=state["opt_state"], batch_fn=batch_fn,
+              steps=args.steps, start_step=start, ckpt_dir=args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

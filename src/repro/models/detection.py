@@ -1,0 +1,94 @@
+"""Detection-head decode + NMS (paper §6.2 post-processing, the "PS side").
+
+The head emits (B, 10, 10, 75) raw values = 3 anchors × (tx, ty, tw, th,
+obj, 20 cls) per cell, y/x/channel order. Decode follows YOLOv3:
+  bx = (σ(tx) + cx)/G, by = (σ(ty) + cy)/G, bw = pw·e^tw, bh = ph·e^th,
+confidence = σ(obj)·max σ(cls). NMS is class-wise greedy IoU suppression,
+implemented with a fixed-iteration lax.fori_loop (jit-safe, static shapes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.yolo import GRID, NUM_ANCHORS, NUM_CLASSES
+
+# Anchor priors (fraction of image size), 3 anchors for the single 10×10 head.
+ANCHORS = jnp.asarray([[0.12, 0.18], [0.32, 0.42], [0.72, 0.78]], jnp.float32)
+
+
+def decode_head(raw: jax.Array) -> dict:
+    """raw (B, G, G, 75) → boxes (B, G·G·A, 4) cxcywh in [0,1], scores, cls."""
+    b = raw.shape[0]
+    r = raw.reshape(b, GRID, GRID, NUM_ANCHORS, 5 + NUM_CLASSES)
+    cy, cx = jnp.meshgrid(jnp.arange(GRID, dtype=jnp.float32),
+                          jnp.arange(GRID, dtype=jnp.float32), indexing="ij")
+    bx = (jax.nn.sigmoid(r[..., 0]) + cx[None, :, :, None]) / GRID
+    by = (jax.nn.sigmoid(r[..., 1]) + cy[None, :, :, None]) / GRID
+    bw = ANCHORS[None, None, None, :, 0] * jnp.exp(jnp.clip(r[..., 2], -8, 8))
+    bh = ANCHORS[None, None, None, :, 1] * jnp.exp(jnp.clip(r[..., 3], -8, 8))
+    obj = jax.nn.sigmoid(r[..., 4])
+    cls_prob = jax.nn.sigmoid(r[..., 5:])
+    boxes = jnp.stack([bx, by, bw, bh], axis=-1).reshape(b, -1, 4)
+    scores = (obj[..., None] * cls_prob).reshape(b, -1, NUM_CLASSES)
+    return {"boxes": boxes, "scores": scores}
+
+
+def iou_cxcywh(a: jax.Array, b: jax.Array) -> jax.Array:
+    """IoU between (..., 4) and (..., 4) cxcywh boxes."""
+    ax1, ay1 = a[..., 0] - a[..., 2] / 2, a[..., 1] - a[..., 3] / 2
+    ax2, ay2 = a[..., 0] + a[..., 2] / 2, a[..., 1] + a[..., 3] / 2
+    bx1, by1 = b[..., 0] - b[..., 2] / 2, b[..., 1] - b[..., 3] / 2
+    bx2, by2 = b[..., 0] + b[..., 2] / 2, b[..., 1] + b[..., 3] / 2
+    iw = jnp.maximum(jnp.minimum(ax2, bx2) - jnp.maximum(ax1, bx1), 0)
+    ih = jnp.maximum(jnp.minimum(ay2, by2) - jnp.maximum(ay1, by1), 0)
+    inter = iw * ih
+    union = (ax2 - ax1) * (ay2 - ay1) + (bx2 - bx1) * (by2 - by1) - inter
+    return inter / jnp.maximum(union, 1e-9)
+
+
+def nms(boxes: jax.Array, scores: jax.Array, *, iou_thresh: float = 0.45,
+        score_thresh: float = 0.25, max_out: int = 50):
+    """Greedy class-agnostic-per-class NMS, static shapes (jit-safe).
+
+    boxes (N, 4), scores (N, C) → (max_out, 4), (max_out,), (max_out,) int32
+    class ids; empty slots have score 0 and class -1.
+    """
+    n = boxes.shape[0]
+    cls_id = jnp.argmax(scores, axis=-1)
+    score = jnp.max(scores, axis=-1)
+    score = jnp.where(score >= score_thresh, score, 0.0)
+
+    def body(i, state):
+        sc, out_b, out_s, out_c = state
+        j = jnp.argmax(sc)
+        best = sc[j]
+        out_b = out_b.at[i].set(boxes[j])
+        out_s = out_s.at[i].set(best)
+        out_c = out_c.at[i].set(jnp.where(best > 0, cls_id[j], -1))
+        ious = iou_cxcywh(boxes[j][None, :], boxes)
+        same_cls = cls_id == cls_id[j]
+        suppress = (ious > iou_thresh) & same_cls
+        sc = jnp.where(suppress, 0.0, sc).at[j].set(0.0)
+        return sc, out_b, out_s, out_c
+
+    init = (score, jnp.zeros((max_out, 4)), jnp.zeros((max_out,)),
+            jnp.full((max_out,), -1, jnp.int32))
+    _, ob, os_, oc = jax.lax.fori_loop(0, max_out, body, init)
+    os_ = jnp.where(os_ > 0, os_, 0.0)
+    return ob, os_, oc
+
+
+import functools
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("iou_thresh", "score_thresh", "max_out"))
+def postprocess(raw: jax.Array, *, iou_thresh: float = 0.45,
+                score_thresh: float = 0.25, max_out: int = 50):
+    """Full post-processing for a batch of raw heads."""
+    dec = decode_head(raw)
+    return jax.vmap(lambda b, s: nms(b, s, iou_thresh=iou_thresh,
+                                     score_thresh=score_thresh,
+                                     max_out=max_out))(dec["boxes"],
+                                                       dec["scores"])

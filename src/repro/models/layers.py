@@ -1,0 +1,410 @@
+"""Transformer building blocks with first-class W1A8 quantization.
+
+Every projection can run in three modes (the paper's scheme generalized from
+CNN channels to features — see DESIGN.md §3):
+  "float"       — plain bf16/f32 matmul (the fp baseline the paper compares to)
+  "w1a8_train"  — QAT: LSQ fake-quant activations + sign-STE weights
+  "w1a8_eval"   — deployment algebra on fake-quant params (eval oracle)
+Packed-bit serving lives in repro/serve (weights pre-packed offline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import (binarize_ste, binarize_weight, lsq_fake_quant,
+                              lsq_grad_scale, quantize_act)
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 → d_model // num_heads
+    # attention flavor
+    rope_theta: float = 1e4
+    rope_fraction: float = 1.0     # chatglm3: 0.5 (2D RoPE)
+    qkv_bias: bool = False         # qwen2.5
+    attn_softcap: float = 0.0      # gemma2: 50.0
+    final_softcap: float = 0.0     # gemma2: 30.0
+    sliding_window: int = 0        # mixtral: 4096; gemma2 local layers: 4096
+    local_global: bool = False     # gemma2: alternate SWA / global layers
+    post_norms: bool = False       # gemma2: post-attn/post-ffn RMSNorm
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    shared_experts: int = 0        # kimi-k2: 1
+    moe_every: int = 1             # jamba: 2 (MoE on every other layer)
+    capacity_factor: float = 1.25
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_kind: str = "mamba2"       # mamba2 (SSD) | mamba1 (selective scan)
+    attn_every: int = 0            # jamba: 8 (1 attention per 8 layers)
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_conv: int = 4
+    # perf: blockwise (flash) attention — 0 = off, else KV/Q block size;
+    # kills the S² score materialization for long prefill/train (§Perf)
+    flash_block: int = 0
+    # perf: pad query heads to a TP-divisible count (qwen 40→48 for TP16);
+    # extra heads are real params, ~heads_pad/heads extra attn compute, but
+    # remove per-layer activation all-gathers (§Perf cell A)
+    pad_heads_to: int = 0
+    # perf: keep the flat head dim in attention einsums and expand KV heads
+    # (repeat) so XLA shards activations on H even when kv% tp != 0 (§Perf)
+    flat_head_attn: bool = False
+    # enc-dec / modality stub
+    encoder_layers: int = 0
+    frontend: str = "none"         # none | audio | vision
+    prefix_len: int = 0            # vision: 256 patch embeddings
+    tie_embeddings: bool = True
+    norm_kind: str = "rms"         # rms | layer
+    act_fn: str = "silu"           # silu | gelu
+    gated_mlp: bool = True
+    # the paper's technique
+    w1a8_body: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def heads_eff(self) -> int:
+        return self.pad_heads_to or self.num_heads
+
+    @property
+    def period(self) -> int:
+        """Repeating layer-pattern length (scan unit)."""
+        p = 1
+        if self.local_global:
+            p = 2
+        if self.attn_every:
+            p = max(p, self.attn_every)
+        if self.num_experts and self.moe_every > 1:
+            p = max(p, self.moe_every)
+        return p
+
+    def mixer_kind(self, i: int) -> str:
+        if self.family in ("ssm",):
+            return "mamba"
+        if self.attn_every:                      # hybrid: 1 attn per period
+            return "attn" if i % self.attn_every == self.attn_every // 2 \
+                else "mamba"
+        if self.local_global:                    # gemma2: local, global, ...
+            return "attn_local" if i % 2 == 0 else "attn_global"
+        return "attn"
+
+    def ffn_kind(self, i: int) -> str:
+        if self.family == "ssm":
+            return "none"
+        if self.num_experts and i % self.moe_every == self.moe_every - 1:
+            return "moe"
+        return "dense"
+
+
+# ---------------------------------------------------------------------------
+# Linear with W1A8 switch
+# ---------------------------------------------------------------------------
+
+def init_linear(key, k: int, n: int, *, w1a8: bool, bias: bool = False,
+                dtype=jnp.float32, scale: float = 1.0) -> dict:
+    p = {"w": jax.random.normal(key, (k, n), dtype) * (scale / jnp.sqrt(k))}
+    if bias:
+        p["b"] = jnp.zeros((n,), dtype)
+    if w1a8:
+        p["act_step"] = jnp.full((), 0.05, dtype)   # scalar LSQ step (body)
+    return p
+
+
+def linear(p: dict, x: jax.Array, mode: str = "float") -> jax.Array:
+    """Apply a (possibly W1A8) projection; mode selects the datapath."""
+    if "w_packed" in p:
+        # deployed 1-bit weights (serve.packed): unpack at use — under jit
+        # the unpack fuses into the matmul producer, so HBM weight traffic
+        # is ~1 bit/weight (16× less than bf16); decode is weight-BW bound.
+        from repro.core import packing
+        signs = packing.unpack_signs(p["w_packed"], x.shape[-1], axis=0,
+                                     dtype=x.dtype)
+        step = p["act_step"].astype(x.dtype)
+        xq = quantize_act(x, step) * step
+        y = (xq @ signs) * p["alpha"].astype(x.dtype)
+        if "b" in p:
+            y = y + p["b"].astype(y.dtype)
+        return y
+    w = p["w"]
+    if "act_step" in p and mode != "float":
+        if mode == "w1a8_train":
+            gs = lsq_grad_scale(x.size // max(x.shape[-1], 1))
+            xq = lsq_fake_quant(x, p["act_step"], jnp.asarray(gs, x.dtype))
+            wb = binarize_ste(w)
+        else:  # w1a8_eval
+            xq = quantize_act(x, p["act_step"]) * p["act_step"]
+            wb = binarize_weight(w)
+        alpha = jax.lax.stop_gradient(jnp.mean(jnp.abs(w), axis=0))
+        y = (xq @ wb.astype(xq.dtype)) * alpha.astype(xq.dtype)
+    else:
+        y = x @ w.astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(d: int, kind: str = "rms", dtype=jnp.float32) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layer":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm(p: dict, x: jax.Array, kind: str = "rms",
+         eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "layer":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + partial/2D fraction)
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, *, theta: float,
+         fraction: float = 1.0) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S). chatglm3 rotates only the
+    first half of head_dim (fraction=0.5, '2D RoPE')."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction) // 2 * 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None, None] * freqs  # (...,S,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., :half], xr[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return jnp.concatenate([out.astype(x.dtype), xp], -1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, SWA, softcap, cross) — pure jnp, shard-friendly
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.hd
+    he = cfg.heads_eff
+    w1a8 = cfg.w1a8_body
+    return {
+        "wq": init_linear(ks[0], d, he * hd, w1a8=w1a8,
+                          bias=cfg.qkv_bias, dtype=dtype),
+        "wk": init_linear(ks[1], d, cfg.num_kv_heads * hd, w1a8=w1a8,
+                          bias=cfg.qkv_bias, dtype=dtype),
+        "wv": init_linear(ks[2], d, cfg.num_kv_heads * hd, w1a8=w1a8,
+                          bias=cfg.qkv_bias, dtype=dtype),
+        "wo": init_linear(ks[3], he * hd, d, w1a8=w1a8,
+                          dtype=dtype),
+    }
+
+
+def _attn_weights(q, k, *, causal: bool, window: int, softcap: float,
+                  q_pos, k_pos):
+    """q (B,S,H,hd), k (B,T,KV,hd) → probs (B,H,S,T) with GQA broadcast."""
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k) / jnp.sqrt(hd).astype(q.dtype)
+    logits = logits.astype(jnp.float32)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if q_pos is not None and (causal or window > 0):
+        qp = q_pos[:, :, None]
+        kp = k_pos[:, None, :]
+        valid = jnp.ones((b, s, t), bool)
+        if causal:
+            valid &= kp <= qp
+        if window > 0:
+            valid &= kp > qp - window
+        logits = jnp.where(valid[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return probs.astype(q.dtype), g
+
+
+def _blockwise_attention(q, k, v, *, causal: bool, window: int,
+                         softcap: float, q_pos, k_pos, block: int):
+    """Flash-attention pattern in pure JAX: double-chunked online softmax.
+
+    Never materializes the (S, T) score matrix — peak extra memory is
+    O(block²) per head. q (B,S,H,hd); k/v (B,T,KV,hd). Positions drive the
+    causal/window mask so ragged batches work unchanged.
+    """
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    bq = min(block, s)
+    bk = min(block, t)
+    nq, nk = -(-s // bq), -(-t // bk)
+    pad_q, pad_k = nq * bq - s, nk * bk - t
+    qp = jnp.pad(q_pos, ((0, 0), (0, pad_q)), constant_values=-1)
+    kp = jnp.pad(k_pos, ((0, 0), (0, pad_k)), constant_values=2 ** 30)
+    q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    scale = 1.0 / math.sqrt(hd)
+    qs = q.reshape(b, nq, bq, kv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    qps = qp.reshape(b, nq, bq).transpose(1, 0, 2)
+    ks = k.reshape(b, nk, bk, kv, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nk, bk, kv, hd).transpose(1, 0, 2, 3, 4)
+    kps = kp.reshape(b, nk, bk).transpose(1, 0, 2)
+
+    def q_block(args):
+        qb, qpb = args                                  # (B,bq,KV,G,hd)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kb, vb, kpb = inp                           # (B,bk,KV,hd)
+            logits = jnp.einsum("bqkgd,btkd->bkgqt", qb, kb) \
+                .astype(jnp.float32) * scale
+            if softcap > 0:
+                logits = softcap * jnp.tanh(logits / softcap)
+            valid = jnp.ones((b, bq, bk), bool)
+            if causal:
+                valid &= kpb[:, None, :] <= qpb[:, :, None]
+            if window > 0:
+                valid &= kpb[:, None, :] > qpb[:, :, None] - window
+            logits = jnp.where(valid[:, None, None, :, :], logits, -1e30)
+            m_new = jnp.maximum(m, jnp.max(logits, -1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, -1)
+            # f32 accumulator regardless of activation dtype (carry-stable)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p, vb.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, kv, g, bq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, bq), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, bq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (ks, vs, kps))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        return out.transpose(0, 3, 1, 2, 4).astype(v.dtype)  # (B,bq,KV,G,hd)
+
+    outs = jax.lax.map(q_block, (qs, qps))              # (nq,B,bq,KV,G,hd)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * bq, h, hd)
+    return out[:, :s]
+
+
+def attention(p: dict, cfg: ModelConfig, x: jax.Array, *,
+              mode: str, causal: bool = True, window: int = 0,
+              positions: Optional[jax.Array] = None,
+              kv_x: Optional[jax.Array] = None,
+              kv_positions: Optional[jax.Array] = None) -> jax.Array:
+    """Self- or cross-attention (kv_x given ⇒ cross, no RoPE on kv source)."""
+    b, s, d = x.shape
+    hd = cfg.hd
+    src = kv_x if kv_x is not None else x
+    t = src.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    if kv_positions is None:
+        kv_positions = positions if kv_x is None else \
+            jnp.broadcast_to(jnp.arange(t), (b, t))
+    q = linear(p["wq"], x, mode).reshape(b, s, cfg.heads_eff, hd)
+    k = linear(p["wk"], src, mode).reshape(b, t, cfg.num_kv_heads, hd)
+    v = linear(p["wv"], src, mode).reshape(b, t, cfg.num_kv_heads, hd)
+    if kv_x is None:                              # RoPE only for self-attn
+        q = rope(q, positions, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
+        k = rope(k, kv_positions, theta=cfg.rope_theta,
+                 fraction=cfg.rope_fraction)
+    if cfg.flat_head_attn:
+        # MHA-ify: expand KV to the flat head dim so activations shard on H
+        g = cfg.heads_eff // cfg.num_kv_heads
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    if cfg.flash_block > 0 and s > cfg.flash_block and kv_x is None:
+        out = _blockwise_attention(q, k, v, causal=causal, window=window,
+                                   softcap=cfg.attn_softcap,
+                                   q_pos=positions, k_pos=kv_positions,
+                                   block=cfg.flash_block)
+        return linear(p["wo"], out.reshape(b, s, -1), mode)
+    probs, g = _attn_weights(q, k, causal=causal and kv_x is None,
+                             window=window, softcap=cfg.attn_softcap,
+                             q_pos=positions, k_pos=kv_positions)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v).reshape(b, s, -1)
+    return linear(p["wo"], out, mode)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated / plain)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None,
+             dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    w1a8 = cfg.w1a8_body
+    p = {"up": init_linear(ks[0], d, f, w1a8=w1a8, dtype=dtype),
+         "down": init_linear(ks[1], f, d, w1a8=w1a8, dtype=dtype)}
+    if cfg.gated_mlp:
+        p["gate"] = init_linear(ks[2], d, f, w1a8=w1a8, dtype=dtype)
+    return p
+
+
+def _act(name: str):
+    return jax.nn.gelu if name == "gelu" else jax.nn.silu
+
+
+def mlp(p: dict, cfg: ModelConfig, x: jax.Array, mode: str) -> jax.Array:
+    up = linear(p["up"], x, mode)
+    if "gate" in p:
+        up = up * _act(cfg.act_fn)(linear(p["gate"], x, mode))
+    else:
+        up = _act(cfg.act_fn)(up)
+    return linear(p["down"], up, mode)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    emb = jax.random.normal(key, (cfg.vocab_size, cfg.d_model), dtype) * 0.02
+    p = {"emb": emb}
+    if not cfg.tie_embeddings:
+        key2 = jax.random.fold_in(key, 1)
+        p["head"] = jax.random.normal(
+            key2, (cfg.d_model, cfg.vocab_size), dtype) * 0.02
+    return p
+
+
+def embed(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["emb"], tokens, axis=0)
+
+
+def unembed(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    logits = x @ (p["head"] if "head" in p else p["emb"].T.astype(x.dtype))
+    if cfg.final_softcap > 0:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits

@@ -1,0 +1,330 @@
+"""State-space mixers: Mamba-2 (SSD, chunked dual form) and Mamba-1
+(selective scan), both with O(1)-state decode steps.
+
+Training form processes the sequence in chunks with a `lax.scan` carrying the
+inter-chunk SSM state — HLO stays compact and per-chunk buffers bound VMEM/HBM
+pressure (the TPU analogue of the fused-SRAM selective-scan kernel). Channel
+dims are TP-shardable: in_proj column-parallel, out_proj row-parallel, the
+scan itself is per-channel (no cross-channel mixing).
+
+mamba2-1.3b uses SSD; jamba's mamba layers use Mamba-1 (d_state 16), per
+their papers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ModelConfig, init_linear, linear
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def init_mamba(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 8)
+    d, di, n = cfg.d_model, d_inner(cfg), cfg.ssm_state
+    w1a8 = cfg.w1a8_body
+    if cfg.ssm_kind == "mamba2":
+        h = di // cfg.ssm_headdim
+        g = 1                                    # single B/C group
+        proj_out = 2 * di + 2 * g * n + h        # z, x, B, C, dt
+        p = {
+            "in_proj": init_linear(ks[0], d, proj_out, w1a8=w1a8, dtype=dtype),
+            "out_proj": init_linear(ks[1], di, d, w1a8=w1a8, dtype=dtype),
+            "conv_w": jax.random.normal(ks[2], (cfg.ssm_conv,
+                                                di + 2 * g * n), dtype) * 0.1,
+            "conv_b": jnp.zeros((di + 2 * g * n,), dtype),
+            "A_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(dtype)),
+            "D": jnp.ones((h,), dtype),
+            "dt_bias": jnp.zeros((h,), dtype),
+            "norm_scale": jnp.ones((di,), dtype),
+        }
+    else:  # mamba1
+        dt_rank = max(1, math.ceil(d / 16))
+        p = {
+            "in_proj": init_linear(ks[0], d, 2 * di, w1a8=w1a8, dtype=dtype),
+            "out_proj": init_linear(ks[1], di, d, w1a8=w1a8, dtype=dtype),
+            "conv_w": jax.random.normal(ks[2], (cfg.ssm_conv, di), dtype) * 0.1,
+            "conv_b": jnp.zeros((di,), dtype),
+            "x_proj": init_linear(ks[3], di, dt_rank + 2 * n, w1a8=False,
+                                  dtype=dtype),
+            "dt_proj": init_linear(ks[4], dt_rank, di, w1a8=False,
+                                   bias=True, dtype=dtype),
+            "A_log": jnp.broadcast_to(
+                jnp.log(jnp.arange(1, n + 1, dtype=dtype)), (di, n)).copy(),
+            "D": jnp.ones((di,), dtype),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (width W) + cache-friendly step form
+# ---------------------------------------------------------------------------
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x (B,S,C), w (W,C): y[t] = Σ_i w[i]·x[t-W+1+i] + b, zero history."""
+    width, s = w.shape[0], x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    acc = sum(xp[:, i:i + s, :] * w[i] for i in range(width))
+    return jax.nn.silu(acc + b)
+
+
+def causal_conv_step(x_new: jax.Array, conv_state: jax.Array, w: jax.Array,
+                     b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Decode step. x_new (B,C); conv_state (B,W-1,C) past inputs."""
+    window = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)
+    y = jnp.einsum("bwc,wc->bc", window, w) + b
+    return jax.nn.silu(y), window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2: SSD chunked scan
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
+                cmat: jax.Array, *, chunk: int = 128,
+                init_state: Optional[jax.Array] = None):
+    """SSD dual form. x (B,S,H,P), dt (B,S,H) ≥0, a (H,) <0,
+    bmat/cmat (B,S,N). Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = bmat.shape[-1]
+    s_pad = -(-s // chunk) * chunk
+    if s_pad != s:
+        pad = ((0, 0), (0, s_pad - s))
+        x = jnp.pad(x, pad + ((0, 0), (0, 0)))
+        dt = jnp.pad(dt, pad + ((0, 0),))
+        bmat = jnp.pad(bmat, pad + ((0, 0),))
+        cmat = jnp.pad(cmat, pad + ((0, 0),))
+    nc = s_pad // chunk
+    xs = x.reshape(bsz, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    dts = dt.reshape(bsz, nc, chunk, h).transpose(1, 0, 2, 3)
+    bs = bmat.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    cs = cmat.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(state, inp):
+        xc, dtc, bc, cc = inp                 # (B,l,H,P), (B,l,H), (B,l,N)
+        da = dtc * a                          # (B,l,H)
+        da_cs = jnp.cumsum(da, axis=1)
+        xdt = xc * dtc[..., None]
+        # intra-chunk (quadratic) term
+        scores = jnp.einsum("bin,bjn->bij", cc, bc)         # (B,l,l)
+        diff = da_cs[:, :, None, :] - da_cs[:, None, :, :]
+        # mask BEFORE exp: where-after-exp leaks inf·0 = NaN into the vjp
+        lmat = jnp.exp(jnp.where(tri[None, :, :, None], diff, -1e30))
+        y_diag = jnp.einsum("bij,bijh,bjhp->bihp", scores, lmat, xdt)
+        # inter-chunk: contribution of the carried state
+        state_decay = jnp.exp(da_cs)                         # (B,l,H)
+        y_off = jnp.einsum("bin,bhpn,bih->bihp", cc, state, state_decay)
+        # new state: decay-weighted sum of this chunk + decayed carry
+        tail = jnp.exp(da_cs[:, -1:, :] - da_cs)             # (B,l,H)
+        chunk_state = jnp.einsum("bln,blhp,blh->bhpn", bc, xdt, tail)
+        new_state = state * jnp.exp(da_cs[:, -1, :])[..., None, None] \
+            + chunk_state
+        return new_state, y_diag + y_off
+
+    state0 = init_state if init_state is not None else \
+        jnp.zeros((bsz, h, p, n), x.dtype)
+    final, ys = jax.lax.scan(step, state0, (xs, dts, bs, cs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s_pad, h, p)[:, :s]
+    return y, final
+
+
+def mamba2_mixer(p: dict, cfg: ModelConfig, xin: jax.Array, *,
+                 mode: str) -> jax.Array:
+    """Full Mamba-2 block: in_proj → conv → SSD → gate → norm → out_proj."""
+    bsz, s, _ = xin.shape
+    di, n = d_inner(cfg), cfg.ssm_state
+    h = di // cfg.ssm_headdim
+    proj = linear(p["in_proj"], xin, mode)
+    z, xbc, dt_raw = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    xbc = causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])              # (B,S,H)
+    a = -jnp.exp(p["A_log"])
+    y, _ = ssd_chunked(xs.reshape(bsz, s, h, cfg.ssm_headdim), dt, a,
+                       bmat, cmat)
+    y = y + xs.reshape(bsz, s, h, cfg.ssm_headdim) * p["D"][:, None]
+    y = y.reshape(bsz, s, di) * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6)
+         * p["norm_scale"]).astype(xin.dtype)
+    return linear(p["out_proj"], y, mode)
+
+
+def mamba2_prefill(p: dict, cfg: ModelConfig, xin: jax.Array, *,
+                   mode: str):
+    """Like mamba2_mixer but also returns the decode cache after the prompt."""
+    bsz, s, _ = xin.shape
+    di, n = d_inner(cfg), cfg.ssm_state
+    h = di // cfg.ssm_headdim
+    proj = linear(p["in_proj"], xin, mode)
+    z, xbc_raw, dt_raw = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    xbc = causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xs, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    y, state = ssd_chunked(xs.reshape(bsz, s, h, cfg.ssm_headdim), dt, a,
+                           bmat, cmat)
+    y = y + xs.reshape(bsz, s, h, cfg.ssm_headdim) * p["D"][:, None]
+    y = y.reshape(bsz, s, di) * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6)
+         * p["norm_scale"]).astype(xin.dtype)
+    w = cfg.ssm_conv
+    conv_state = xbc_raw[:, s - (w - 1):, :] if s >= w - 1 else jnp.pad(
+        xbc_raw, ((0, 0), (w - 1 - s, 0), (0, 0)))
+    return linear(p["out_proj"], y, mode), {"conv": conv_state, "ssm": state}
+
+
+def mamba1_prefill(p: dict, cfg: ModelConfig, xin: jax.Array, *, mode: str):
+    bsz, s, _ = xin.shape
+    di, n = d_inner(cfg), cfg.ssm_state
+    xz = linear(p["in_proj"], xin, mode)
+    xs_raw, z = jnp.split(xz, 2, axis=-1)
+    xs = causal_conv(xs_raw, p["conv_w"], p["conv_b"])
+    proj = linear(p["x_proj"], xs, "float")
+    dt_rank = proj.shape[-1] - 2 * n
+    dt_lr, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(linear(p["dt_proj"], dt_lr, "float"))
+    a = -jnp.exp(p["A_log"])
+    y, state = selective_scan_chunked(xs, dt, a, bmat, cmat)
+    y = (y + xs * p["D"]) * jax.nn.silu(z)
+    w = cfg.ssm_conv
+    conv_state = xs_raw[:, s - (w - 1):, :] if s >= w - 1 else jnp.pad(
+        xs_raw, ((0, 0), (w - 1 - s, 0), (0, 0)))
+    return linear(p["out_proj"], y, mode), {"conv": conv_state, "ssm": state}
+
+
+def mamba2_decode_step(p: dict, cfg: ModelConfig, xin: jax.Array,
+                       cache: dict, mode: str) -> Tuple[jax.Array, dict]:
+    """One-token recurrent update. xin (B,1,D); cache {conv (B,W-1,C),
+    ssm (B,H,P,N)} — O(1) memory in sequence length."""
+    bsz = xin.shape[0]
+    di, n = d_inner(cfg), cfg.ssm_state
+    h, pd = di // cfg.ssm_headdim, cfg.ssm_headdim
+    proj = linear(p["in_proj"], xin[:, 0, :], mode)
+    z, xbc, dt_raw = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    xbc, conv_state = causal_conv_step(xbc, cache["conv"], p["conv_w"],
+                                       p["conv_b"])
+    xs, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])              # (B,H)
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * a)                                     # (B,H)
+    xh = xs.reshape(bsz, h, pd)
+    ssm = cache["ssm"] * da[..., None, None] + \
+        jnp.einsum("bhp,bn,bh->bhpn", xh, bmat, dt)
+    y = jnp.einsum("bhpn,bn->bhp", ssm, cmat) + xh * p["D"][:, None]
+    y = y.reshape(bsz, di) * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6)
+         * p["norm_scale"]).astype(xin.dtype)
+    out = linear(p["out_proj"], y, mode)
+    return out[:, None, :], {"conv": conv_state, "ssm": ssm}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1: chunked selective scan (jamba's mixer, d_state 16)
+# ---------------------------------------------------------------------------
+
+def selective_scan_chunked(u: jax.Array, dt: jax.Array, a: jax.Array,
+                           bmat: jax.Array, cmat: jax.Array, *,
+                           chunk: int = 128,
+                           init_state: Optional[jax.Array] = None):
+    """u/dt (B,S,C), a (C,N), bmat/cmat (B,S,N) → (y (B,S,C), state (B,C,N)).
+
+    h_t = exp(dt·a)·h_{t-1} + dt·b_t·u_t ; y_t = ⟨h_t, c_t⟩.
+    Outer lax.scan over chunks, inner associative scan within a chunk.
+    """
+    bsz, s, c = u.shape
+    n = bmat.shape[-1]
+    s_pad = -(-s // chunk) * chunk
+    if s_pad != s:
+        pad = ((0, 0), (0, s_pad - s), (0, 0))
+        u, dt = jnp.pad(u, pad), jnp.pad(dt, pad)
+        bmat, cmat = jnp.pad(bmat, pad), jnp.pad(cmat, pad)
+    nc = s_pad // chunk
+    us = u.reshape(bsz, nc, chunk, c).transpose(1, 0, 2, 3)
+    dts = dt.reshape(bsz, nc, chunk, c).transpose(1, 0, 2, 3)
+    bs = bmat.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    cs = cmat.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    def assoc(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    def step(state, inp):
+        uc, dtc, bc, cc = inp
+        da = jnp.exp(dtc[..., None] * a)                     # (B,l,C,N)
+        dbu = dtc[..., None] * bc[:, :, None, :] * uc[..., None]
+        aa, hh = jax.lax.associative_scan(assoc, (da, dbu), axis=1)
+        hh = hh + aa * state[:, None]                        # inject carry
+        y = jnp.einsum("blcn,bln->blc", hh, cc)
+        return hh[:, -1], y
+
+    state0 = init_state if init_state is not None else \
+        jnp.zeros((bsz, c, n), u.dtype)
+    final, ys = jax.lax.scan(step, state0, (us, dts, bs, cs))
+    y = ys.transpose(1, 0, 2, 3).reshape(bsz, s_pad, c)[:, :s]
+    return y, final
+
+
+def mamba1_mixer(p: dict, cfg: ModelConfig, xin: jax.Array, *,
+                 mode: str) -> jax.Array:
+    bsz, s, _ = xin.shape
+    di, n = d_inner(cfg), cfg.ssm_state
+    xz = linear(p["in_proj"], xin, mode)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = causal_conv(xs, p["conv_w"], p["conv_b"])
+    proj = linear(p["x_proj"], xs, "float")
+    dt_rank = proj.shape[-1] - 2 * n
+    dt_lr, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(linear(p["dt_proj"], dt_lr, "float"))
+    a = -jnp.exp(p["A_log"])
+    y, _ = selective_scan_chunked(xs, dt, a, bmat, cmat)
+    y = y + xs * p["D"]
+    y = y * jax.nn.silu(z)
+    return linear(p["out_proj"], y, mode)
+
+
+def mamba1_decode_step(p: dict, cfg: ModelConfig, xin: jax.Array,
+                       cache: dict, mode: str) -> Tuple[jax.Array, dict]:
+    bsz = xin.shape[0]
+    di, n = d_inner(cfg), cfg.ssm_state
+    xz = linear(p["in_proj"], xin[:, 0, :], mode)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, conv_state = causal_conv_step(xs, cache["conv"], p["conv_w"],
+                                      p["conv_b"])
+    proj = linear(p["x_proj"], xs, "float")
+    dt_rank = proj.shape[-1] - 2 * n
+    dt_lr, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(linear(p["dt_proj"], dt_lr, "float"))   # (B,C)
+    a = -jnp.exp(p["A_log"])                                     # (C,N)
+    da = jnp.exp(dt[..., None] * a)
+    ssm = cache["ssm"] * da + dt[..., None] * bmat[:, None, :] * xs[..., None]
+    y = jnp.einsum("bcn,bn->bc", ssm, cmat) + xs * p["D"]
+    y = y * jax.nn.silu(z)
+    out = linear(p["out_proj"], y, mode)
+    return out[:, None, :], {"conv": conv_state, "ssm": ssm}
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    di, n = d_inner(cfg), cfg.ssm_state
+    if cfg.ssm_kind == "mamba2":
+        h, pd = di // cfg.ssm_headdim, cfg.ssm_headdim
+        conv_c = di + 2 * n
+        return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_c), dtype),
+                "ssm": jnp.zeros((batch, h, pd, n), dtype)}
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+            "ssm": jnp.zeros((batch, di, n), dtype)}

@@ -1,0 +1,9 @@
+"""Optimizers (pure JAX, no optax): AdamW, Adafactor, SGD-M + schedules.
+
+Adafactor (factored second moment, no first moment by default) exists for
+the ≥398B archs where AdamW's 8 bytes/param of state does not fit the pod —
+see EXPERIMENTS.md §Dry-run memory notes.
+"""
+from repro.optim.optimizers import (adafactor, adamw, apply_updates,
+                                    clip_by_global_norm, sgdm)
+from repro.optim.schedules import cosine_schedule, linear_warmup  # noqa: F401

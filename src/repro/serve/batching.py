@@ -1,0 +1,96 @@
+"""Slot-based continuous batching — the request-level serving loop.
+
+A fixed pool of B slots runs one fused decode_step per tick; requests join
+any free slot (their prompt prefilled into that row's cache lines) and leave
+when finished, without stalling other rows. Per-row `lengths` make the
+attention masks correct across heterogeneous positions.
+
+Row-wise prefill uses a B=1 prefill + cache splice; production would batch
+prefills, but the splice keeps the engine simple and exactly correct.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ModelConfig
+from repro.serve.engine import decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 256, mode: str = "float",
+                 temperature: float = 0.0):
+        self.cfg, self.params = cfg, params
+        self.slots, self.max_len, self.mode = slots, max_len, mode
+        self.temperature = temperature
+        self.cache = init_cache(cfg, slots, max_len)
+        self.active: Dict[int, Request] = {}      # slot → request
+        self.last_tok = jnp.zeros((slots,), jnp.int32)
+        self._step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t,
+                                                         mode=mode))
+        self._key = jax.random.PRNGKey(17)
+
+    # -- request admission ---------------------------------------------------
+    def add_request(self, req: Request) -> bool:
+        free = [s for s in range(self.slots) if s not in self.active]
+        if not free:
+            return False
+        slot = free[0]
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        logits, cache1 = prefill(self.cfg, self.params, prompt,
+                                 max_len=self.max_len, mode=self.mode)
+        # splice row `slot` of the pool cache from the B=1 prefill cache
+        def splice(pool, one):
+            return pool.at[:, slot] .set(one[:, 0]) \
+                if pool.ndim >= 2 and pool.shape[1] == self.slots else pool
+        new_slots = []
+        for pool_c, one_c in zip(self.cache["slots"], cache1["slots"]):
+            new_slots.append(jax.tree_util.tree_map(splice, pool_c, one_c))
+        self.cache = {"slots": tuple(new_slots),
+                      "lengths": self.cache["lengths"].at[slot]
+                      .set(prompt.shape[1])}
+        self.last_tok = self.last_tok.at[slot].set(
+            int(jnp.argmax(logits[0])))
+        self.active[slot] = req
+        return True
+
+    # -- one decode tick -----------------------------------------------------
+    def step(self):
+        if not self.active:
+            return
+        for slot, req in self.active.items():
+            req.out.append(int(self.last_tok[slot]))
+        logits, self.cache = self._step(self.params, self.cache,
+                                        self.last_tok[:, None])
+        if self.temperature > 0:
+            self._key, k = jax.random.split(self._key)
+            nxt = jax.random.categorical(k, logits / self.temperature, -1)
+        else:
+            nxt = jnp.argmax(logits, -1)
+        self.last_tok = nxt.astype(jnp.int32)
+        for slot in list(self.active):
+            req = self.active[slot]
+            if len(req.out) >= req.max_new:
+                req.done = True
+                del self.active[slot]
+
+    def run(self, requests: List[Request]):
+        queue = list(requests)
+        while queue or self.active:
+            while queue and self.add_request(queue[0]):
+                queue.pop(0)
+            self.step()
+        return requests

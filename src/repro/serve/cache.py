@@ -1,0 +1,52 @@
+"""KV / SSM decode caches with static shapes (slot-based batching).
+
+Layout: one cache entry per layer-slot, stacked over stages like the params
+(consumed by the same lax.scan). Attention caches are (stages, B, S_max,
+KV, hd) ×2; mamba caches are the O(1) recurrent states. Per-row `lengths`
+(B,) drive causal masking, so rows at different positions coexist in one
+batch (continuous batching).
+
+Sharding: batch over DP axes, kv-heads over "model" when divisible; for the
+long_500k cells the KV sequence dim shards over "data" instead (context /
+sequence parallelism — see serve.sp_attention).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba as mb
+from repro.models.layers import ModelConfig
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.float32) -> dict:
+    """Cache pytree: {'slots': tuple per period-slot, 'lengths': (B,)}."""
+    n_stages = cfg.num_layers // cfg.period
+    slots = []
+    for i in range(cfg.period):
+        kind = cfg.mixer_kind(i)
+        if kind.startswith("attn"):
+            shape = (n_stages, batch, max_len, cfg.num_kv_heads, cfg.hd)
+            slots.append({"k": jnp.zeros(shape, dtype),
+                          "v": jnp.zeros(shape, dtype)})
+        else:
+            one = mb.init_mamba_cache(cfg, batch, dtype)
+            slots.append(jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (n_stages,) + x.shape)
+                .copy() if hasattr(x, "shape") else x, one))
+    cache = {"slots": tuple(slots),
+             "lengths": jnp.zeros((batch,), jnp.int32)}
+    if cfg.encoder_layers:
+        cache["enc_out"] = jnp.zeros((batch, max_len, cfg.d_model), dtype)
+    return cache
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, max_len: int,
+                bytes_per_el: int = 4) -> int:
+    leaves = jax.tree_util.tree_leaves(jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_len)))
+    return sum(int(jnp.prod(jnp.asarray(l.shape))) * bytes_per_el
+               for l in leaves)

@@ -1,0 +1,247 @@
+"""Serving engine: prefill + decode with slot-based continuous batching.
+
+decode_step — one token for every active row against the stage-stacked
+cache (same lax.scan structure as training, so the dry-run lowers the real
+serving computation). Sliding-window archs (mixtral; gemma2 local layers)
+use **ring KV caches** bounded by the window: long_500k decode for mixtral
+keeps 4096 slots/layer instead of 524288 (128× cache memory, the
+bounded-state property that makes the cell runnable — DESIGN.md §5).
+
+Packed-W1A8 params (serve.packed.deploy_lm) drop weight HBM traffic 16×,
+which is the dominant term of decode roofline (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba as mb
+from repro.models.layers import (ModelConfig, embed, linear, norm, rope,
+                                 unembed)
+from repro.models.transformer import _apply_slot
+
+BIGPOS = jnp.int32(2 ** 30)
+
+
+# ---------------------------------------------------------------------------
+# Cache (ring-aware)
+# ---------------------------------------------------------------------------
+
+def _attn_cache_len(cfg: ModelConfig, kind: str, max_len: int) -> int:
+    window = 0
+    if kind == "attn_local" or (cfg.sliding_window and not cfg.local_global):
+        window = cfg.sliding_window
+    return min(max_len, window) if window else max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.float32) -> dict:
+    n_stages = cfg.num_layers // cfg.period
+    slots = []
+    for i in range(cfg.period):
+        kind = cfg.mixer_kind(i)
+        if kind.startswith("attn"):
+            length = _attn_cache_len(cfg, kind, max_len)
+            shape = (n_stages, batch, length, cfg.num_kv_heads, cfg.hd)
+            slots.append({"k": jnp.zeros(shape, dtype),
+                          "v": jnp.zeros(shape, dtype),
+                          "pos": jnp.full((n_stages, batch, length), BIGPOS)})
+        else:
+            one = mb.init_mamba_cache(cfg, batch, dtype)
+            slots.append(jax.tree_util.tree_map(
+                lambda x: jnp.zeros((n_stages,) + x.shape, x.dtype), one))
+    return {"slots": tuple(slots),
+            "lengths": jnp.zeros((batch,), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Attention with cache (decode: 1 token; ring writes via pos % L)
+# ---------------------------------------------------------------------------
+
+def _attn_decode(p, cfg: ModelConfig, x, kc, vc, pc, pos, *, mode,
+                 window: int):
+    b, _, d = x.shape
+    hd, kvh = cfg.hd, cfg.num_kv_heads
+    length = kc.shape[1]
+    q = linear(p["wq"], x, mode).reshape(b, 1, cfg.num_heads, hd)
+    k = linear(p["wk"], x, mode).reshape(b, 1, kvh, hd)
+    v = linear(p["wv"], x, mode).reshape(b, 1, kvh, hd)
+    q = rope(q, pos[:, None], theta=cfg.rope_theta,
+             fraction=cfg.rope_fraction)
+    k = rope(k, pos[:, None], theta=cfg.rope_theta,
+             fraction=cfg.rope_fraction)
+    slot = pos % length                                     # ring position
+    bi = jnp.arange(b)
+    kc = kc.at[bi, slot].set(k[:, 0])
+    vc = vc.at[bi, slot].set(v[:, 0])
+    pc = pc.at[bi, slot].set(pos)
+    # GQA scores over the whole (ring) cache
+    g = cfg.num_heads // kvh
+    qg = q.reshape(b, 1, kvh, g, hd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, kc) / jnp.sqrt(hd)
+    logits = logits.astype(jnp.float32)
+    if cfg.attn_softcap > 0:
+        logits = cfg.attn_softcap * jnp.tanh(logits / cfg.attn_softcap)
+    valid = pc <= pos[:, None]                              # causal+unwritten
+    if window > 0:
+        valid &= pc > (pos[:, None] - window)
+    logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, vc).reshape(b, 1, -1)
+    return linear(p["wo"], out, mode), kc, vc, pc
+
+
+# ---------------------------------------------------------------------------
+# decode_step / prefill
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                tokens: jax.Array, *, mode: str = "float",
+                ctx=None) -> Tuple[jax.Array, dict]:
+    """tokens (B, 1) → (logits (B, vocab), updated cache). O(1) per step for
+    SSM/ring slots; O(cache_len) attention reads otherwise."""
+    kinds = [(cfg.mixer_kind(i), cfg.ffn_kind(i)) for i in range(cfg.period)]
+    pos = cache["lengths"]
+    x = embed(params["embed"], tokens)
+
+    def stage(x, slot_and_cache):
+        slots, caches = slot_and_cache
+        new_caches = []
+        for i, (mk, fk) in enumerate(kinds):
+            slot, c = slots[i], caches[i]
+            h = norm(slot["norm1"], x, cfg.norm_kind)
+            if mk.startswith("attn"):
+                window = 0
+                if mk == "attn_local" or (cfg.sliding_window and
+                                          not cfg.local_global):
+                    window = cfg.sliding_window
+                out, kc, vc, pc = _attn_decode(slot["attn"], cfg, h,
+                                               c["k"], c["v"], c["pos"],
+                                               pos, mode=mode, window=window)
+                new_caches.append({"k": kc, "v": vc, "pos": pc})
+            else:
+                step_fn = (mb.mamba2_decode_step if cfg.ssm_kind == "mamba2"
+                           else mb.mamba1_decode_step)
+                out, nc = step_fn(slot["mamba"], cfg, h, c, mode)
+                new_caches.append(nc)
+            if cfg.post_norms:
+                out = norm(slot["post_norm1"], out, cfg.norm_kind)
+            x = x + out.astype(x.dtype)
+            if fk != "none":
+                h = norm(slot["norm2"], x, cfg.norm_kind)
+                if fk == "moe":
+                    from repro.models.transformer import _apply_moe
+                    out = _apply_moe(slot["moe"], cfg, h, mode, ctx)
+                else:
+                    from repro.models.layers import mlp
+                    out = mlp(slot["mlp"], cfg, h, mode)
+                if cfg.post_norms:
+                    out = norm(slot["post_norm2"], out, cfg.norm_kind)
+                x = x + out.astype(x.dtype)
+        return x, tuple(new_caches)
+
+    x, new_slots = jax.lax.scan(stage, x, (params["slots"], cache["slots"]))
+    x = norm(params["final_norm"], x, cfg.norm_kind)
+    logits = unembed(params["embed"], cfg, x)[:, 0, :]
+    return logits, {"slots": new_slots, "lengths": cache["lengths"] + 1}
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+            max_len: int, mode: str = "float",
+            ctx=None) -> Tuple[jax.Array, dict]:
+    """Process the prompt (B, S) and build the decode cache.
+
+    Attention K/V for the prompt are written at positions [0, S); mamba
+    slots carry the post-prompt recurrent state.
+    """
+    from repro.models.layers import attention
+    kinds = [(cfg.mixer_kind(i), cfg.ffn_kind(i)) for i in range(cfg.period)]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = embed(params["embed"], tokens)
+    cache0 = init_cache(cfg, b, max_len, dtype=x.dtype)
+
+    def stage(x, slot_and_cache):
+        slots, caches = slot_and_cache
+        new_caches = []
+        for i, (mk, fk) in enumerate(kinds):
+            slot, c = slots[i], caches[i]
+            h = norm(slot["norm1"], x, cfg.norm_kind)
+            if mk.startswith("attn"):
+                window = 0
+                if mk == "attn_local" or (cfg.sliding_window and
+                                          not cfg.local_global):
+                    window = cfg.sliding_window
+                hd, kvh = cfg.hd, cfg.num_kv_heads
+                k = linear(slot["attn"]["wk"], h, mode).reshape(b, s, kvh, hd)
+                v = linear(slot["attn"]["wv"], h, mode).reshape(b, s, kvh, hd)
+                kr = rope(k, positions, theta=cfg.rope_theta,
+                          fraction=cfg.rope_fraction)
+                out = attention(slot["attn"], cfg, h, mode=mode, causal=True,
+                                window=window, positions=positions)
+                length = c["k"].shape[1]
+                take = min(s, length)
+                src_from = s - take
+                ring_pos = (jnp.arange(take) + src_from) % length
+                kc = c["k"].at[:, ring_pos].set(kr[:, src_from:])
+                vc = c["v"].at[:, ring_pos].set(v[:, src_from:])
+                pc = c["pos"].at[:, ring_pos].set(
+                    jnp.arange(src_from, s)[None, :])
+                new_caches.append({"k": kc, "v": vc, "pos": pc})
+            else:
+                pre = (mb.mamba2_prefill if cfg.ssm_kind == "mamba2"
+                       else mb.mamba1_prefill)
+                out, nc = pre(slot["mamba"], cfg, h, mode=mode)
+                new_caches.append(nc)
+            if cfg.post_norms:
+                out = norm(slot["post_norm1"], out, cfg.norm_kind)
+            x = x + out
+            if fk != "none":
+                h = norm(slot["norm2"], x, cfg.norm_kind)
+                if fk == "moe":
+                    from repro.models.transformer import _apply_moe
+                    out = _apply_moe(slot["moe"], cfg, h, mode, ctx)
+                else:
+                    from repro.models.layers import mlp
+                    out = mlp(slot["mlp"], cfg, h, mode)
+                if cfg.post_norms:
+                    out = norm(slot["post_norm2"], out, cfg.norm_kind)
+                x = x + out
+        return x, tuple(new_caches)
+
+    x, new_slots = jax.lax.scan(stage, x, (params["slots"], cache0["slots"]))
+    x = norm(params["final_norm"], x, cfg.norm_kind)
+    logits = unembed(params["embed"], cfg, x)[:, -1, :]
+    return logits, {"slots": new_slots,
+                    "lengths": jnp.full((b,), s, jnp.int32)}
+
+
+def generate(cfg: ModelConfig, params: dict, prompts: jax.Array, *,
+             max_new: int, max_len: int, mode: str = "float",
+             temperature: float = 0.0, key: Optional[jax.Array] = None,
+             ctx=None) -> jax.Array:
+    """Greedy / temperature sampling: (B, S) prompts → (B, max_new) tokens."""
+    logits, cache = prefill(cfg, params, prompts, max_len=max_len, mode=mode,
+                            ctx=ctx)
+    step_jit = jax.jit(functools.partial(decode_step, cfg, mode=mode,
+                                         ctx=ctx))
+
+    def sample(lg, k):
+        if temperature <= 0:
+            return jnp.argmax(lg, -1).astype(jnp.int32)
+        return jax.random.categorical(k, lg / temperature).astype(jnp.int32)
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    toks = []
+    nxt = sample(logits, key)
+    for i in range(max_new):
+        toks.append(nxt)
+        if i == max_new - 1:
+            break
+        logits, cache = step_jit(params, cache, nxt[:, None])
+        key = jax.random.fold_in(key, i)
+        nxt = sample(logits, key)
+    return jnp.stack(toks, axis=1)

@@ -1,0 +1,4 @@
+"""Training stack: QAT train step (microbatch grad accumulation), loop with
+checkpoint/restart + preemption handling, YOLO detection training."""
+from repro.train.step import make_train_step  # noqa: F401
+from repro.train.loop import run_train  # noqa: F401

@@ -1,0 +1,92 @@
+"""Training loop with fault-tolerance plumbing.
+
+Restart contract: checkpoint = (params, opt_state, step[, metadata]); data
+is stateless-by-step so resume is exact. Preemption: SIGTERM or a
+``<ckpt_dir>/PREEMPT`` sentinel file triggers save-and-exit at the next step
+boundary (the SLURM/Borg grace-period pattern). A per-step watchdog logs
+straggler steps (wall-clock > watchdog_factor × median).
+"""
+from __future__ import annotations
+
+import os
+import signal
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro import ckpt as ckpt_lib
+
+
+class _PreemptFlag:
+    def __init__(self):
+        self.hit = False
+
+    def install(self):
+        try:
+            signal.signal(signal.SIGTERM, lambda *_: setattr(self, "hit", True))
+        except ValueError:
+            pass                    # non-main thread (tests)
+
+
+def run_train(*, train_step: Callable, params, opt_state,
+              batch_fn: Callable, steps: int,
+              ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+              start_step: int = 0, log_every: int = 10,
+              async_ckpt: bool = True, watchdog_factor: float = 3.0,
+              print_fn: Callable = print):
+    """Generic loop; batch_fn(step) → batch dict. Returns final state."""
+    flag = _PreemptFlag()
+    flag.install()
+    durations = []
+    step = start_step
+    for step in range(start_step, steps):
+        t0 = time.time()
+        batch = batch_fn(step)
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        if step % log_every == 0 or step == steps - 1:
+            loss = float(metrics["loss"])
+            print_fn(f"step {step:5d} loss {loss:.4f} "
+                     f"gnorm {float(metrics['grad_norm']):.3f}")
+            if not np.isfinite(loss):
+                raise FloatingPointError(f"loss diverged at step {step}")
+        dt = time.time() - t0
+        durations.append(dt)
+        med = float(np.median(durations[-50:]))
+        if len(durations) > 5 and dt > watchdog_factor * med:
+            print_fn(f"[watchdog] step {step} took {dt:.2f}s "
+                     f"(median {med:.2f}s) — straggler suspected")
+        preempt = flag.hit or (ckpt_dir and
+                               os.path.exists(os.path.join(ckpt_dir,
+                                                           "PREEMPT")))
+        if ckpt_dir and ((step + 1) % ckpt_every == 0 or preempt or
+                         step == steps - 1):
+            ckpt_lib.save_checkpoint(
+                ckpt_dir, step + 1,
+                {"params": params, "opt_state": opt_state},
+                metadata={"loss": float(metrics["loss"])},
+                async_=async_ckpt and not preempt)
+        if preempt:
+            print_fn(f"[preempt] checkpointed at step {step + 1}; exiting")
+            break
+    ckpt_lib.wait_for_async()
+    return params, opt_state, step + 1
+
+
+def resume_or_init(ckpt_dir: Optional[str], init_fn: Callable,
+                   shardings=None, print_fn: Callable = print):
+    """Elastic restore: loads the latest checkpoint onto the *current* mesh
+    (shardings), regardless of the mesh it was saved from."""
+    template = jax.eval_shape(init_fn)
+    if ckpt_dir:
+        last = ckpt_lib.latest_step(ckpt_dir)
+        if last is not None:
+            state, meta = ckpt_lib.restore_checkpoint(
+                ckpt_dir, last, template, shardings=shardings)
+            print_fn(f"[resume] restored step {last} from {ckpt_dir}")
+            return state, last
+    state = init_fn()
+    if shardings is not None:
+        state = jax.device_put(state, shardings)
+    return state, 0

@@ -1,0 +1,64 @@
+"""QAT training for the paper's W1A8 detector (the paper's training recipe:
+latent fp weights + sign-STE forward, LSQ activation steps — §3.2).
+
+Loss is YOLOv3-style on the single 10×10 head: MSE on σ(tx),σ(ty) and raw
+tw,th at assigned cells, BCE on objectness and classes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import yolo_target
+from repro.models import yolo
+from repro.models.yolo import GRID, NUM_ANCHORS, NUM_CLASSES
+from repro.optim import apply_updates, clip_by_global_norm
+
+
+def yolo_loss(params, images, target):
+    """target: (B,G,G,A,5+C) rasterized ground truth (data.yolo_target)."""
+    raw = yolo.yolo_forward_float(params, images, train=True)
+    r = raw.reshape(raw.shape[0], GRID, GRID, NUM_ANCHORS, 5 + NUM_CLASSES)
+    obj_t = target[..., 4]
+    pos = obj_t > 0.5
+
+    pxy = jax.nn.sigmoid(r[..., 0:2])
+    # box centers relative to cell
+    cell = jnp.stack(jnp.meshgrid(jnp.arange(GRID), jnp.arange(GRID),
+                                  indexing="ij"), -1)[None, :, :, None, :]
+    txy_t = target[..., 0:2] * GRID - cell[..., ::-1]
+    loss_xy = jnp.sum(jnp.where(pos[..., None],
+                                (pxy - txy_t) ** 2, 0.0))
+    wh_t = jnp.log(jnp.clip(target[..., 2:4], 1e-3, 1.0))
+    loss_wh = jnp.sum(jnp.where(pos[..., None],
+                                (r[..., 2:4] - wh_t) ** 2, 0.0))
+    obj_logit = r[..., 4]
+    loss_obj = jnp.mean(
+        jnp.maximum(obj_logit, 0) - obj_logit * obj_t +
+        jnp.log1p(jnp.exp(-jnp.abs(obj_logit))))
+    cls_logit = r[..., 5:]
+    cls_t = target[..., 5:]
+    bce = (jnp.maximum(cls_logit, 0) - cls_logit * cls_t +
+           jnp.log1p(jnp.exp(-jnp.abs(cls_logit))))
+    loss_cls = jnp.sum(jnp.where(pos[..., None], bce, 0.0))
+    npos = jnp.maximum(jnp.sum(pos), 1.0)
+    return (loss_xy + loss_wh + loss_cls) / npos + loss_obj
+
+
+def make_yolo_train_step(optimizer, *, max_grad_norm: float = 5.0):
+    _, update = optimizer
+
+    @jax.jit
+    def step_fn(params, opt_state, images, boxes, classes):
+        target = yolo_target(boxes, classes)
+
+        loss, grads = jax.value_and_grad(yolo_loss)(params, images, target)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        updates, opt_state = update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm,
+                                   "step": opt_state["step"]}
+
+    return step_fn

@@ -1,0 +1,4 @@
+"""Import jax before any test module: repro.launch.{dryrun,costs} only force
+the 512-device XLA flag when jax is not yet imported (fresh script runs), so
+touching jax here pins the test session to the real 1-device CPU backend."""
+import jax  # noqa: F401

@@ -1,0 +1,157 @@
+"""Multi-device correctness checks, run in a fresh process with 16 virtual
+devices (tests/test_dist.py shells out to this). Asserts:
+
+  1. MoE EP all-to-all path ≡ single-device reference
+  2. TP-in-expert (psum) ≡ reference, incl. QAT α pmean
+  3. GPipe pipeline ≡ sequential stage application
+  4. int8-quantized all-reduce ≈ exact mean (< 1% rel err)
+  5. sharded W1A8 train step ≡ single-device step (same loss)
+  6. SP (context-parallel) decode attention ≡ dense attention
+"""
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=16 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import dataclasses  # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.dist.collectives import tree_quantized_allreduce  # noqa: E402
+from repro.dist.pipeline import gpipe  # noqa: E402
+from repro.dist import sharding as shard_rules  # noqa: E402
+from repro.models import moe as moe_mod  # noqa: E402
+from repro.models.layers import ModelConfig  # noqa: E402
+from repro.models.transformer import (ShardCtx, init_lm_params,  # noqa: E402
+                                      lm_forward)
+from repro.optim import sgdm  # noqa: E402
+from repro.train.step import make_train_step  # noqa: E402
+
+
+def check_moe_ep():
+    cfg = ModelConfig(name="t", family="moe", num_layers=2, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      num_experts=4, top_k=2, capacity_factor=4.0,
+                      w1a8_body=True)
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 32))
+    for mode in ("float", "w1a8_train"):
+        y_ref = moe_mod.moe_ffn(p, cfg, x, mode=mode, ep_axis=None)
+        mesh = jax.make_mesh((4, 4), ("data", "model"))
+
+        def inner(pl, xl):
+            return moe_mod.moe_ffn(pl, cfg, xl, mode=mode, ep_axis="data",
+                                   tp_axis="model")
+        specs = {"router": P(None, None), "up": P("data", None, "model"),
+                 "gate": P("data", None, "model"),
+                 "down": P("data", "model", None), "act_step": P()}
+        with mesh:
+            y = jax.jit(jax.shard_map(
+                inner, mesh=mesh, in_specs=(specs, P("data", None)),
+                out_specs=P("data", None), check_vma=False))(p, x)
+        err = float(jnp.max(jnp.abs(y - y_ref)))
+        assert err < 2e-5, f"moe ep ({mode}): {err}"
+    print("1/2. MoE EP+TP (float & QAT) OK")
+
+
+def check_gpipe():
+    mesh = jax.make_mesh((4, 4), ("pod", "model"))
+    n_stages, num_micro, mb, d = 4, 8, 2, 16
+    ws = jax.random.normal(jax.random.PRNGKey(2), (n_stages, d, d)) * 0.3
+
+    def stage_fn(w, x):
+        return jnp.tanh(x @ w)
+
+    x = jax.random.normal(jax.random.PRNGKey(3), (num_micro, mb, d))
+    want = x
+    for i in range(n_stages):
+        want = jax.vmap(lambda xm: stage_fn(ws[i], xm))(want)
+    f = gpipe(stage_fn, mesh=mesh, axis="pod", num_micro=num_micro)
+    with mesh:
+        got = f(ws, x)
+    err = float(jnp.max(jnp.abs(got - want)))
+    assert err < 1e-5, f"gpipe: {err}"
+    print("3. GPipe pipeline OK")
+
+
+def check_quantized_allreduce():
+    mesh = jax.make_mesh((16,), ("data",))
+    g = jax.random.normal(jax.random.PRNGKey(4), (16, 64, 64))
+
+    def inner(gl):
+        return tree_quantized_allreduce({"g": gl[0]}, "data")["g"]
+
+    with mesh:
+        out = jax.jit(jax.shard_map(inner, mesh=mesh,
+                                    in_specs=(P("data", None, None),),
+                                    out_specs=P(), check_vma=False))(g)
+    want = jnp.mean(g, axis=0)
+    rel = float(jnp.linalg.norm(out - want) / jnp.linalg.norm(want))
+    # int8 wire format carries ~1% relative noise on unit-normal grads —
+    # the bandwidth/precision trade documented in dist/collectives.py
+    assert rel < 0.03, f"quantized allreduce rel err {rel}"
+    print(f"4. int8 all-reduce OK (rel err {rel:.4f})")
+
+
+def check_sharded_train_step():
+    cfg = dataclasses.replace(configs.get_reduced("mixtral-8x7b"),
+                              num_experts=4, d_ff=64)
+    params = init_lm_params(jax.random.PRNGKey(5), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(6), (8, 16), 0,
+                              cfg.vocab_size, jnp.int32)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    opt = sgdm(1e-2)
+    s_ref = make_train_step(cfg, opt, remat=False)
+    _, _, m_ref = s_ref(params, opt[0](params), batch)
+
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
+    ctx = ShardCtx(mesh=mesh, dp_axes=("data",), tp_axis="model",
+                   ep_axis="data")
+    p_sh = shard_rules.tree_shardings(params, cfg, mesh)
+    o_sh = shard_rules.tree_shardings(opt[0](params), cfg, mesh)
+    b_sh = {"tokens": NamedSharding(mesh, P("data", None)),
+            "labels": NamedSharding(mesh, P("data", None))}
+    s_dist = jax.jit(make_train_step(cfg, opt, remat=True, ctx=ctx,
+                                     microbatches=2),
+                     in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, None))
+    with mesh:
+        _, _, m = s_dist(jax.device_put(params, p_sh),
+                         jax.device_put(opt[0](params), o_sh),
+                         jax.device_put(batch, b_sh))
+    diff = abs(float(m["loss"]) - float(m_ref["loss"]))
+    assert diff < 5e-3, f"sharded train loss diff {diff}"
+    print(f"5. sharded train step OK (loss diff {diff:.2e})")
+
+
+def check_sp_attention():
+    from repro.serve.sp import sp_decode_attention
+    mesh = jax.make_mesh((16,), ("data",))
+    b, h, kv, hd, t = 2, 8, 4, 16, 64
+    key = jax.random.PRNGKey(7)
+    q = jax.random.normal(key, (b, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, t, kv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, t, kv, hd))
+    pos = jnp.broadcast_to(jnp.arange(t), (b, t))
+    cur = jnp.full((b,), 40)
+    from repro.serve.sp import sp_attention_local
+    o_ref, m_ref, l_ref = sp_attention_local(q, k, v, pos, cur)
+    o_ref = o_ref / l_ref[..., None]
+    with mesh:
+        got = sp_decode_attention(mesh, "data", q, k, v, pos, cur)
+    err = float(jnp.max(jnp.abs(got - o_ref)))
+    assert err < 1e-5, f"sp attention: {err}"
+    print("6. SP decode attention OK")
+
+
+if __name__ == "__main__":
+    check_moe_ep()
+    check_gpipe()
+    check_quantized_allreduce()
+    check_sharded_train_step()
+    check_sp_attention()
+    print("ALL DIST CHECKS PASSED")

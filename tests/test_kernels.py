@@ -1,0 +1,154 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles.
+
+Every kernel runs in interpret mode (CPU) and is asserted allclose against
+ref.py; the exact-int path is asserted bit-equal.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing
+from repro.kernels.w1a8_conv import ops as conv_ops
+from repro.kernels.w1a8_conv import ref as conv_ref
+from repro.kernels.w1a8_matmul import kernel as mm_kernel
+from repro.kernels.w1a8_matmul import ops as mm_ops
+from repro.kernels.w1a8_matmul import ref as mm_ref
+
+
+def _mm_case(m, k, n, seed):
+    kw, ka, km = jax.random.split(jax.random.PRNGKey(seed), 3)
+    w = jax.random.normal(kw, (k, n))
+    wp = packing.pack_signs(w, axis=0)
+    a = jax.random.randint(ka, (m, k), 0, 256, jnp.int32).astype(jnp.uint8)
+    mul = jax.random.uniform(km, (k,), jnp.float32, 0.01, 0.1)
+    div = jax.random.uniform(km, (n,), jnp.float32, 0.5, 1.5)
+    b = jax.random.normal(km, (n,), jnp.float32)
+    return a, wp, mul, div, b
+
+
+MM_SHAPES = [(1, 32, 8), (5, 70, 12), (16, 64, 128), (128, 512, 256),
+             (300, 1152, 75), (2, 4608, 192), (257, 96, 130)]
+
+
+@pytest.mark.parametrize("m,k,n", MM_SHAPES)
+def test_w1a8_matmul_matches_ref(m, k, n):
+    a, wp, mul, div, b = _mm_case(m, k, n, seed=m * 31 + k + n)
+    y_ref = mm_ref.w1a8_matmul_ref(a, wp, k, mul, div, b)
+    y_ker = mm_ops.w1a8_matmul(a, wp, mul, div, b, k=k, interpret=True)
+    scale = float(jnp.max(jnp.abs(y_ref))) + 1e-9
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               atol=6e-3 * scale)
+
+
+@pytest.mark.parametrize("m,k,n", [(16, 64, 128), (300, 1152, 75)])
+def test_w1a8_matmul_requant_within_1lsb(m, k, n):
+    a, wp, mul, div, b = _mm_case(m, k, n, seed=7)
+    y = mm_ref.w1a8_matmul_ref(a, wp, k, mul, div, b)
+    # realistic LSQ step: matched to the activation range (as training learns)
+    step = float(jnp.max(jnp.abs(y))) / 255.0
+    q_ref = mm_ref.w1a8_matmul_ref(a, wp, k, mul, div, b,
+                                   out_step=jnp.float32(step))
+    q_ker = mm_ops.w1a8_matmul(a, wp, mul, div, b, k=k, out_step=step,
+                               interpret=True)
+    diff = np.abs(np.asarray(q_ker, np.int32) - np.asarray(q_ref, np.int32))
+    assert (diff <= 1).mean() > 0.995, f"1-LSB agreement {(diff <= 1).mean()}"
+    assert diff.mean() < 0.3
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 64, 128), (256, 512, 256), (32, 1024, 128)])
+def test_w1a8_matmul_int_path_bit_exact(m, k, n):
+    a, wp, *_ = _mm_case(m, k, n, seed=k)
+    signs = packing.unpack_signs(wp, k, axis=0, dtype=jnp.int32)
+    colsum = jnp.sum(signs, axis=0, dtype=jnp.int32).reshape(1, n)
+    bm = max(8, min(m, 256))
+    bk = min(k, 512)
+    bn = min(n, 256)
+    y = mm_kernel.w1a8_matmul_int_pallas(a, wp, colsum, bm=bm, bk=bk, bn=bn,
+                                         interpret=True)
+    y_ref = a.astype(jnp.int32) @ signs
+    assert bool(jnp.all(y == y_ref)), "exact-int kernel must be bit-exact"
+
+
+def test_w1a8_matmul_batched_leading_dims():
+    a, wp, mul, div, b = _mm_case(12, 96, 40, seed=3)
+    a3 = a.reshape(3, 4, 96)
+    y = mm_ops.w1a8_matmul(a3, wp, mul, div, b, k=96, interpret=True)
+    assert y.shape == (3, 4, 40)
+    y2 = mm_ops.w1a8_matmul(a, wp, mul, div, b, k=96, interpret=True)
+    np.testing.assert_allclose(np.asarray(y).reshape(12, 40), np.asarray(y2),
+                               rtol=0, atol=1e-5)
+
+
+CONV_SHAPES = [(1, 4, 4, 8, 16), (2, 8, 8, 16, 32), (1, 10, 10, 64, 75),
+               (1, 20, 20, 128, 128), (3, 7, 9, 24, 40)]
+
+
+@pytest.mark.parametrize("b,h,w,cin,cout", CONV_SHAPES)
+def test_w1a8_conv_matches_ref(b, h, w, cin, cout):
+    kw, ka, km = jax.random.split(jax.random.PRNGKey(b * 100 + cin), 3)
+    wgt = jax.random.normal(kw, (3, 3, cin, cout))
+    wp = conv_ops.conv_pack_weights(wgt)
+    a = jax.random.randint(ka, (b, h, w, cin), 0, 256, jnp.int32).astype(jnp.uint8)
+    mul = jax.random.uniform(km, (cin,), jnp.float32, 0.01, 0.1)
+    div = jax.random.uniform(km, (cout,), jnp.float32, 0.5, 1.5)
+    bias = jax.random.normal(km, (cout,), jnp.float32)
+    y_ref = conv_ref.w1a8_conv3x3_ref(a, wp, cin, mul, div, bias)
+    y_ker = conv_ops.w1a8_conv3x3(a, wp, mul, div, bias, cin=cin,
+                                  interpret=True)
+    scale = float(jnp.max(jnp.abs(y_ref))) + 1e-9
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               atol=6e-3 * scale)
+
+
+def test_w1a8_conv_requant_uint8():
+    b, h, w, cin, cout = 1, 6, 6, 16, 24
+    kw, ka, km = jax.random.split(jax.random.PRNGKey(0), 3)
+    wgt = jax.random.normal(kw, (3, 3, cin, cout))
+    wp = conv_ops.conv_pack_weights(wgt)
+    a = jax.random.randint(ka, (b, h, w, cin), 0, 256, jnp.int32).astype(jnp.uint8)
+    mul = jnp.full((cin,), 0.05, jnp.float32)
+    div = jnp.ones((cout,), jnp.float32)
+    bias = jnp.zeros((cout,), jnp.float32)
+    y = conv_ref.w1a8_conv3x3_ref(a, wp, cin, mul, div, bias)
+    step = float(jnp.max(jnp.abs(y))) / 255.0
+    q_ref = conv_ref.w1a8_conv3x3_ref(a, wp, cin, mul, div, bias,
+                                      out_step=jnp.float32(step))
+    q_ker = conv_ops.w1a8_conv3x3(a, wp, mul, div, bias, cin=cin,
+                                  out_step=step, interpret=True)
+    assert q_ker.dtype == jnp.uint8
+    diff = np.abs(np.asarray(q_ker, np.int32) - np.asarray(q_ref, np.int32))
+    assert (diff <= 1).mean() > 0.995
+
+
+def test_packing_roundtrip_axes():
+    for axis, shape in [(0, (70, 12)), (1, (12, 70)), (0, (32, 5)), (0, (33, 4))]:
+        w = jax.random.normal(jax.random.PRNGKey(axis + shape[0]), shape)
+        pk = packing.pack_signs(w, axis=axis)
+        un = packing.unpack_signs(pk, shape[axis], axis=axis)
+        expect = np.where(np.asarray(w) >= 0, 1, -1)
+        assert np.array_equal(np.asarray(un), expect)
+
+
+def test_fused_conv_pool_matches_unfused():
+    """Paper §5.2 Post+MaxPool fusion: one kernel == conv→requant→pool."""
+    from repro.kernels.w1a8_conv.fused_pool import w1a8_conv3x3_pool2
+    b, h, w, cin, cout = 1, 8, 8, 16, 32
+    kw, ka, km = jax.random.split(jax.random.PRNGKey(5), 3)
+    wgt = jax.random.normal(kw, (3, 3, cin, cout))
+    wp = conv_ops.conv_pack_weights(wgt)
+    a = jax.random.randint(ka, (b, h, w, cin), 0, 256, jnp.int32).astype(jnp.uint8)
+    mul = jax.random.uniform(km, (cin,), jnp.float32, 0.01, 0.1)
+    div = jax.random.uniform(km, (cout,), jnp.float32, 0.5, 1.5)
+    bias = jax.random.normal(km, (cout,), jnp.float32)
+    y = conv_ref.w1a8_conv3x3_ref(a, wp, cin, mul, div, bias)
+    step = float(jnp.max(jnp.abs(y))) / 255.0
+    q = conv_ref.w1a8_conv3x3_ref(a, wp, cin, mul, div, bias,
+                                  out_step=jnp.float32(step))
+    want = jax.lax.reduce_window(q, jnp.uint8(0), jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    got = w1a8_conv3x3_pool2(a, wp, mul, div, bias, cin=cin, out_step=step,
+                             interpret=True)
+    assert got.shape == (b, h // 2, w // 2, cout)
+    diff = np.abs(np.asarray(got, np.int32) - np.asarray(want, np.int32))
+    assert (diff <= 1).mean() > 0.995 and diff.max() <= 2

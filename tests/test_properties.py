@@ -1,0 +1,159 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import fixedpoint as fxp
+from repro.core import packing
+from repro.core.quant import (ACT_QMAX, binarize_weight, quantize_act,
+                              round_half_away, sign_accumulate_fused)
+
+SET = dict(deadline=None, max_examples=25)
+
+
+@settings(**SET)
+@given(hnp.arrays(np.float32, hnp.array_shapes(min_dims=2, max_dims=2,
+                                               min_side=1, max_side=80),
+                  elements=st.floats(-4, 4, width=32,
+                                     allow_subnormal=False)))
+def test_pack_unpack_roundtrip(w):
+    pk = packing.pack_signs(jnp.asarray(w), axis=0)
+    un = np.asarray(packing.unpack_signs(pk, w.shape[0], axis=0))
+    assert np.array_equal(un, np.where(w >= 0, 1, -1))
+    # storage: exactly ceil(K/32) words per column
+    assert pk.shape == ((w.shape[0] + 31) // 32, w.shape[1])
+
+
+@settings(**SET)
+@given(hnp.arrays(np.float32, (13,), elements=st.floats(-1e4, 1e4,
+                                                        width=32)))
+def test_round_half_away_matches_python(x):
+    got = np.asarray(round_half_away(jnp.asarray(x)))
+    import math
+    want = np.asarray([math.floor(v + 0.5) if v >= 0 else math.ceil(v - 0.5)
+                       for v in x], np.float32)
+    assert np.array_equal(got, want)
+
+
+@settings(**SET)
+@given(hnp.arrays(np.float32, (4, 7), elements=st.floats(-100, 100,
+                                                         width=32)),
+       st.floats(1e-3, 2.0))
+def test_quantize_act_bounds_and_idempotence(x, step):
+    q = np.asarray(quantize_act(jnp.asarray(x), jnp.float32(step)))
+    assert q.min() >= 0 and q.max() <= ACT_QMAX
+    assert np.array_equal(q, np.round(q))            # integer codes
+    # quantizing a dequantized value is a fixed point
+    q2 = np.asarray(quantize_act(jnp.asarray(q * step), jnp.float32(step)))
+    assert np.array_equal(q, q2)
+
+
+@settings(**SET)
+@given(st.integers(0, 2 ** 40), st.integers(1, 2 ** 16), st.integers(4, 20))
+def test_fixed_mul_rshift_is_rounded_product(x, m, f):
+    got = int(fxp.fixed_mul_rshift(np.int64(x), np.int64(m), f))
+    want = int(np.floor(x * m / 2 ** f + 0.5))
+    assert got == want
+
+
+@settings(**SET)
+@given(st.floats(-30, 30, width=32))
+def test_qformat_roundtrip_error_bound(v):
+    qf = fxp.CONV1_W                                  # Q5.11
+    rt = float(qf.roundtrip(jnp.float32(v)))
+    if -32 <= v <= 31.999:                            # in range
+        assert abs(rt - v) <= 2 ** -11 / 2 + 1e-9
+    assert qf.raw_min / qf.scale <= rt <= qf.raw_max / qf.scale
+
+
+@settings(**SET)
+@given(hnp.arrays(np.float32, (3, 24), elements=st.floats(0, 255, width=32)),
+       hnp.arrays(np.float32, (24, 8), elements=st.floats(-2, 2, width=32)),
+       hnp.arrays(np.float32, (24,), elements=st.floats(0.0078125, 1.0,
+                                                        width=32)))
+def test_eq34_fusion_equals_two_step(a, w, m):
+    """Eq. 3-4: Σ s(m·a) == (a ⊙ m) @ sign(w) — fusion is exact algebra."""
+    signs = binarize_weight(jnp.asarray(w))
+    fused = np.asarray(sign_accumulate_fused(jnp.asarray(a), jnp.asarray(m),
+                                             signs))
+    # numpy accumulates in f64; tolerate f32 summation-order differences
+    twostep = np.asarray((a * m) @ np.asarray(signs))
+    scale = np.abs(twostep).max() + 1.0
+    np.testing.assert_allclose(fused, twostep, atol=2e-5 * scale)
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(1, 3), st.integers(8, 40), st.integers(1, 2),
+       st.integers(0, 1000))
+def test_blockwise_attention_equals_dense(b, s, kvh_pow, seed):
+    from repro.models.layers import _blockwise_attention, _attn_weights
+    kv = 2 * kvh_pow
+    h, hd = kv * 2, 8
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, hd))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    probs, g = _attn_weights(q, k, causal=True, window=0, softcap=0.0,
+                             q_pos=pos, k_pos=pos)
+    dense = jnp.einsum("bkgst,btkd->bskgd", probs, v).reshape(b, s, h, hd)
+    block = _blockwise_attention(q, k, v, causal=True, window=0, softcap=0.0,
+                                 q_pos=pos, k_pos=pos, block=16)
+    np.testing.assert_allclose(np.asarray(block), np.asarray(dense),
+                               atol=2e-5)
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(4, 32), st.integers(0, 100))
+def test_moe_no_drop_when_cf_equals_experts(t, seed):
+    """cap ≥ T·k ⇒ every assignment survives ⇒ Σ gates recovered exactly."""
+    from repro.models.layers import ModelConfig
+    from repro.models import moe as moe_mod
+    cfg = ModelConfig(name="t", family="moe", num_layers=1, d_model=16,
+                      num_heads=2, num_kv_heads=2, d_ff=32, vocab_size=8,
+                      num_experts=4, top_k=2, capacity_factor=4.0,
+                      w1a8_body=False)
+    p = moe_mod.init_moe(jax.random.PRNGKey(seed), cfg)
+    # identity-ish experts: y should equal Σ_k gate_k · expert_k(x)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (t, 16))
+    y = moe_mod.moe_ffn(p, cfg, x, mode="float")
+    # brute-force reference over all experts
+    import numpy as _np
+    logits = np.asarray(x @ p["router"])
+    top = _np.argsort(-logits, axis=1)[:, :2]
+    gates = jax.nn.softmax(jnp.take_along_axis(jnp.asarray(logits),
+                                               jnp.asarray(top), 1), -1)
+    want = _np.zeros((t, 16), _np.float32)
+    for e in range(4):
+        up = np.asarray(x @ p["up"][e])
+        gt = np.asarray(x @ p["gate"][e])
+        h = up * (gt / (1 + _np.exp(-gt)))
+        out_e = h @ np.asarray(p["down"][e])
+        for kk in range(2):
+            mask = (top[:, kk] == e)
+            want[mask] += _np.asarray(gates)[mask, kk, None] * out_e[mask]
+    _np.testing.assert_allclose(np.asarray(y), want, atol=3e-4)
+
+
+@settings(deadline=None, max_examples=8)
+@given(st.integers(2, 12), st.integers(0, 50))
+def test_nms_kept_boxes_are_mutually_distant(n, seed):
+    from repro.models.detection import iou_cxcywh, nms
+    key = jax.random.PRNGKey(seed)
+    boxes = jnp.stack([jax.random.uniform(key, (n,), minval=0.2, maxval=0.8),
+                       jax.random.uniform(jax.random.fold_in(key, 1), (n,),
+                                          minval=0.2, maxval=0.8),
+                       jnp.full((n,), 0.2), jnp.full((n,), 0.2)], -1)
+    scores = jax.random.uniform(jax.random.fold_in(key, 2), (n, 20),
+                                minval=0.3, maxval=1.0)
+    ob, osc, oc = nms(boxes, scores, iou_thresh=0.45, max_out=n)
+    kept = [(np.asarray(ob[i]), int(oc[i])) for i in range(n)
+            if float(osc[i]) > 0]
+    for i in range(len(kept)):
+        for j in range(i + 1, len(kept)):
+            if kept[i][1] == kept[j][1]:
+                iou = float(iou_cxcywh(jnp.asarray(kept[i][0]),
+                                       jnp.asarray(kept[j][0])))
+                assert iou <= 0.45 + 1e-6
