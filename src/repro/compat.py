@@ -1,0 +1,68 @@
+"""JAX API compatibility shims.
+
+The distribution layer (and its tests) target the modern spelling
+``jax.shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)``.
+Older jax releases (< 0.5) only ship ``jax.experimental.shard_map.shard_map``
+with the ``check_rep`` keyword. Importing this module installs a forwarding
+wrapper onto the ``jax`` namespace so both spellings work everywhere.
+
+Import-order safe: this module imports jax itself, so it must only be pulled
+in from modules that already import jax at module scope (never from package
+``__init__``s that scripts import *before* setting XLA_FLAGS).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None, **kwargs):
+        # modern name for replication checking; legacy jax calls it check_rep
+        if "check_vma" in kwargs and "check_rep" not in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        kwargs.pop("check_vma", None)
+        return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, **kwargs)
+
+    jax.shard_map = shard_map
+
+
+def _install_axis_size() -> None:
+    if hasattr(jax.lax, "axis_size"):
+        return
+
+    def axis_size(axis_name):
+        # psum of a concrete 1 folds to the static mapped-axis size
+        return jax.lax.psum(1, axis_name)
+
+    jax.lax.axis_size = axis_size
+
+
+def _install_pallas_compiler_params() -> None:
+    """Pallas renamed TPUCompilerParams → CompilerParams; alias the old name
+    so kernels written against the modern API run on older jax."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except ImportError:                                # pallas not available
+        return
+    if not hasattr(pltpu, "CompilerParams") and \
+            hasattr(pltpu, "TPUCompilerParams"):
+        pltpu.CompilerParams = pltpu.TPUCompilerParams
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize Compiled.cost_analysis() across jax versions: older jax
+    returns a one-element list of dicts, newer jax the dict itself."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+_install_shard_map()
+_install_axis_size()
+_install_pallas_compiler_params()

@@ -1,0 +1,91 @@
+"""Quantized collectives: int8-on-the-wire gradient all-reduce (DESIGN.md §9).
+
+The paper's W1A8 wire discipline — carry codes, not floats, and keep the
+scale arithmetic exact on the side — applied to the data-parallel gradient
+reduction. A mean all-reduce over ``n`` shards decomposes into
+
+    quantize → all_to_all(int8 codes) → local sum (int32) →
+    requantize → all_gather(int8 codes) → dequantize
+
+i.e. a reduce-scatter + all-gather ring where **every inter-chip payload is
+1 byte/element**: ≈4× less ICI traffic than an f32 ring all-reduce (2×4
+bytes·(n−1)/n vs 2×1). Both quantization stages share one per-leaf scale
+across shards (``pmax`` of the abs-max, scalar-sized), so codes from
+different shards are summable exactly in int32 — the same
+compensation-survives-parallelism rule as the sharding layer.
+
+Precision: symmetric int8 with round-half-away (``core.quant``) carries
+~0.23%·max quantization noise per stage; on unit-normal gradients the two
+stages compose to ≈1% relative error on the mean — the bandwidth/precision
+trade the dist tests assert (<3%).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat  # noqa: F401
+from repro.core.quant import round_half_away
+
+tmap = jax.tree_util.tree_map
+
+_QMAX = 127  # symmetric int8 code range [-127, 127]
+
+
+def _quantize(x: jax.Array, scale: jax.Array) -> jax.Array:
+    return jnp.clip(round_half_away(x / scale), -_QMAX, _QMAX).astype(jnp.int8)
+
+
+def _shared_scale(x: jax.Array, axis: str) -> jax.Array:
+    """One scale for all shards: pmax of the local abs-max (scalar wire)."""
+    amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis)
+    return jnp.maximum(amax, 1e-20) / _QMAX
+
+
+def quantized_allreduce_mean(g: jax.Array, axis: str) -> jax.Array:
+    """Mean of ``g`` across ``axis`` with int8 payloads (inside shard_map).
+
+    Non-float leaves (step counters riding in the tree) fall back to an
+    exact dtype-preserving mean: psum then floor-div — identical replicated
+    values come back unchanged.
+    """
+    if not jnp.issubdtype(g.dtype, jnp.floating):
+        return jax.lax.psum(g, axis) // jax.lax.axis_size(axis)
+    n = jax.lax.axis_size(axis)
+    shape, dtype = g.shape, g.dtype
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(n, -1)                       # row j → shard j
+
+    # reduce-scatter leg: int8 codes, exchanged with all_to_all
+    scale1 = _shared_scale(chunks, axis)
+    codes = jax.lax.all_to_all(_quantize(chunks, scale1), axis,
+                               split_axis=0, concat_axis=0)
+    # local accumulation is exact: |sum| ≤ n·127 ≪ int32
+    part = jnp.sum(codes.astype(jnp.int32), axis=0).astype(jnp.float32) \
+        * scale1 / n                                   # this shard's mean
+
+    # all-gather leg: requantized int8 codes of the mean chunk
+    scale2 = _shared_scale(part, axis)
+    gathered = jax.lax.all_gather(_quantize(part, scale2), axis, tiled=True)
+    out = gathered.astype(jnp.float32) * scale2
+    if pad:
+        out = out[:-pad]
+    return out.reshape(shape).astype(dtype)
+
+
+def tree_quantized_allreduce(tree, axis: str):
+    """Per-leaf-scaled int8 mean all-reduce over a gradient pytree."""
+    return tmap(lambda g: quantized_allreduce_mean(g, axis), tree)
+
+
+def wire_bytes_saved(tree, n: int) -> dict:
+    """Accounting helper: int8 ring traffic vs f32 ring all-reduce."""
+    numel = sum(int(jnp.size(l)) for l in jax.tree_util.tree_leaves(tree))
+    f = (n - 1) / max(n, 1)
+    f32 = 2 * 4 * numel * f
+    int8 = 2 * 1 * numel * f
+    return {"f32_bytes": f32, "int8_bytes": int8,
+            "ratio": f32 / max(int8, 1)}

@@ -22,7 +22,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat  # noqa: F401  (pltpu.CompilerParams on older jax)
 from repro.core.packing import PACK
+from repro.core.quant import round_half_away
 from repro.kernels.w1a8_matmul.kernel import _unpack_tile
 
 
@@ -44,7 +46,7 @@ def _conv_kernel(rm1_ref, r0_ref, rp1_ref, wp_ref, m_ref, d_ref, b_ref,
     if out_step is None:
         o_ref[0, 0] = y.astype(o_ref.dtype)
     else:
-        q = jnp.trunc(y / out_step + 0.5)
+        q = round_half_away(y / out_step)       # same rounding as ref.py
         o_ref[0, 0] = jnp.clip(q, 0, 255).astype(o_ref.dtype)
 
 

@@ -26,7 +26,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat  # noqa: F401  (pltpu.CompilerParams on older jax)
 from repro.core.packing import PACK
+from repro.core.quant import round_half_away
 
 DEF_BM, DEF_BK, DEF_BN = 256, 512, 256
 
@@ -62,9 +64,7 @@ def _matmul_kernel(a_ref, wp_ref, m_ref, d_ref, b_ref, o_ref, acc_ref, *,
         if out_step is None:
             o_ref[...] = y.astype(o_ref.dtype)
         else:
-            # round-half-away then clip; negatives clip to 0 so trunc(x+0.5)
-            # (exact for x ≥ -0.5) suffices.
-            q = jnp.trunc(y / out_step + 0.5)
+            q = round_half_away(y / out_step)   # same rounding as ref.py
             o_ref[...] = jnp.clip(q, 0, 255).astype(o_ref.dtype)
 
 

@@ -51,9 +51,10 @@ from repro.serve.packed import deploy_lm       # noqa: E402
 
 
 def _cost_of(jitted, *args):
+    from repro.compat import cost_analysis_dict
     lowered = jitted.lower(*args)
     compiled = lowered.compile()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     coll = dr.parse_collectives(compiled.as_text())
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0)),

@@ -369,7 +369,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             k: int(getattr(mem, k, 0) or 0)
             for k in ("argument_size_in_bytes", "output_size_in_bytes",
                       "temp_size_in_bytes", "generated_code_size_in_bytes")}
-        cost = compiled.cost_analysis() or {}
+        from repro.compat import cost_analysis_dict
+        cost = cost_analysis_dict(compiled)
         flops = float(cost.get("flops", 0.0))
         bytes_acc = float(cost.get("bytes accessed", 0.0))
         rec["cost"] = {"flops": flops, "bytes_accessed": bytes_acc}

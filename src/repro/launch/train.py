@@ -57,22 +57,39 @@ def main():
         args.optimizer](sched)
 
     ctx = None
+    mesh = None
     if args.production_mesh:
-        from repro.dist import sharding as shard_rules
         from repro.launch.mesh import make_production_mesh
         mesh = make_production_mesh()
         ctx = ShardCtx(mesh=mesh, dp_axes=("data",), tp_axis="model",
                        ep_axis="data" if cfg.num_experts else None)
 
-    step_fn = jax.jit(make_train_step(
-        cfg, opt, mode=args.mode, microbatches=args.microbatches, ctx=ctx,
-        remat=not args.reduced))
+    raw_step = make_train_step(cfg, opt, mode=args.mode,
+                               microbatches=args.microbatches, ctx=ctx,
+                               remat=not args.reduced)
+    if mesh is not None:
+        # dist-layer wiring: place params/opt state with the sharding rules
+        # so jit never has to guess (and resharding collectives never appear)
+        from repro.dist import sharding as shard_rules
+        p_sds = jax.eval_shape(
+            lambda: init_lm_params(jax.random.PRNGKey(args.seed), cfg))
+        p_sh = shard_rules.tree_shardings(p_sds, cfg, mesh)
+        o_sh = shard_rules.tree_shardings(jax.eval_shape(opt[0], p_sds),
+                                          cfg, mesh)
+        step_fn = jax.jit(raw_step, in_shardings=(p_sh, o_sh, None),
+                          out_shardings=(p_sh, o_sh, None),
+                          donate_argnums=(0, 1))
+    else:
+        step_fn = jax.jit(raw_step)
 
     def init_fn():
         params = init_lm_params(jax.random.PRNGKey(args.seed), cfg)
         return {"params": params, "opt_state": opt[0](params)}
 
-    state, start = resume_or_init(args.ckpt_dir, init_fn)
+    shardings = {"params": p_sh, "opt_state": o_sh} if mesh is not None \
+        else None
+    state, start = resume_or_init(args.ckpt_dir, init_fn,
+                                  shardings=shardings)
     ds = data.make_lm_dataset(cfg.vocab_size, args.seq_len,
                               args.global_batch, seed=args.seed)
 

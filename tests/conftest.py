@@ -2,3 +2,10 @@
 the 512-device XLA flag when jax is not yet imported (fresh script runs), so
 touching jax here pins the test session to the real 1-device CPU backend."""
 import jax  # noqa: F401
+
+
+class FakeProdMesh:
+    """Production-sized (16, 16) mesh stand-in for sharding-rule tests —
+    shapes only, no devices (param_spec never touches device state)."""
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}

@@ -39,15 +39,11 @@ def test_sharding_rules_cover_all_archs():
 def test_sharding_rules_shard_the_big_tensors():
     """On a (4,4) devices=1 stand-in mesh the spec strings must place the
     model axis on FFN/attention projections (not replicate everything)."""
+    from conftest import FakeProdMesh as FakeMesh
     from repro import configs
     from repro.dist.sharding import param_spec
 
     cfg = configs.get_config("qwen2.5-14b")
-    mesh = jax.make_mesh((1, 1), ("data", "model"))
-
-    class FakeMesh:
-        axis_names = ("data", "model")
-        shape = {"data": 16, "model": 16}
 
     spec = param_spec("['slots'][0]['attn']['wq']['w']",
                       (5120, 5120), cfg, FakeMesh())

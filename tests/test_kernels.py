@@ -121,6 +121,54 @@ def test_w1a8_conv_requant_uint8():
     assert (diff <= 1).mean() > 0.995
 
 
+@pytest.mark.parametrize("make_case", ["matmul", "conv"])
+def test_requant_epilogue_rounding_matches_ref_across_zero(make_case):
+    """Regression: kernel and ref epilogues must agree **bit-exact** on
+    pre-clip values that straddle zero (incl. exact ±half-integers, the
+    rounding boundary). Both now call core.quant.round_half_away; note the
+    uint8 clip rail at 0 makes the old trunc(x+0.5) form observationally
+    identical below zero, so what this locks is the shared rounding helper
+    plus exact positive-side agreement — any future epilogue drift (ties,
+    offsets, clip order) breaks the equality.
+
+    The arithmetic is made exact on purpose: mul ≡ 1 keeps the bf16 MXU
+    operands integral, so the only freedom left is the epilogue.
+    """
+    if make_case == "matmul":
+        m, k, n = 16, 64, 128
+        a, wp, *_ = _mm_case(m, k, n, seed=11)
+        mul = jnp.ones((k,), jnp.float32)
+        div = jnp.ones((n,), jnp.float32)
+        # half-integer biases centred so pre-clip y/step straddles zero
+        bias = (jnp.arange(n, dtype=jnp.float32) - n / 2) * 7.0 + 0.5
+        y = mm_ref.w1a8_matmul_ref(a, wp, k, mul, div, bias)
+        step = float(jnp.max(jnp.abs(y))) / 64.0          # many values < 0
+        q_ref = mm_ref.w1a8_matmul_ref(a, wp, k, mul, div, bias,
+                                       out_step=jnp.float32(step))
+        q_ker = mm_ops.w1a8_matmul(a, wp, mul, div, bias, k=k,
+                                   out_step=step, interpret=True)
+    else:
+        b, h, w, cin, cout = 1, 6, 6, 16, 24
+        kw, ka = jax.random.split(jax.random.PRNGKey(12), 2)
+        wgt = jax.random.normal(kw, (3, 3, cin, cout))
+        wp = conv_ops.conv_pack_weights(wgt)
+        a = jax.random.randint(ka, (b, h, w, cin), 0, 256,
+                               jnp.int32).astype(jnp.uint8)
+        mul = jnp.ones((cin,), jnp.float32)
+        div = jnp.ones((cout,), jnp.float32)
+        bias = (jnp.arange(cout, dtype=jnp.float32) - cout / 2) * 9.0 + 0.5
+        y = conv_ref.w1a8_conv3x3_ref(a, wp, cin, mul, div, bias)
+        step = float(jnp.max(jnp.abs(y))) / 64.0
+        q_ref = conv_ref.w1a8_conv3x3_ref(a, wp, cin, mul, div, bias,
+                                          out_step=jnp.float32(step))
+        q_ker = conv_ops.w1a8_conv3x3(a, wp, mul, div, bias, cin=cin,
+                                      out_step=step, interpret=True)
+    q_ref, q_ker = np.asarray(q_ref, np.int32), np.asarray(q_ker, np.int32)
+    assert (q_ref == 0).any() and (q_ref > 0).any(), "inputs must straddle 0"
+    assert np.array_equal(q_ker, q_ref), \
+        f"epilogue rounding drifted from ref ({np.abs(q_ker - q_ref).max()} LSB)"
+
+
 def test_packing_roundtrip_axes():
     for axis, shape in [(0, (70, 12)), (1, (12, 70)), (0, (32, 5)), (0, (33, 4))]:
         w = jax.random.normal(jax.random.PRNGKey(axis + shape[0]), shape)

@@ -1,9 +1,16 @@
-"""Property-based tests (hypothesis) on the system's invariants."""
+"""Property-based tests (hypothesis) on the system's invariants.
+
+hypothesis is an optional dev dependency (declared in pyproject's ``dev``
+extra); when absent the whole module skips instead of erroring collection.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
-from hypothesis.extra import numpy as hnp
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+hnp = pytest.importorskip("hypothesis.extra.numpy")
 
 from repro.core import fixedpoint as fxp
 from repro.core import packing
