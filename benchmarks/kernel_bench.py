@@ -10,7 +10,6 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import packing
 from repro.core.w1a8 import (deploy_w1a8_linear, init_w1a8_linear,
                              w1a8_linear_float_ref, w1a8_linear_infer)
 

@@ -4,8 +4,9 @@
 W1A8. Structure lives in repro.models.yolo (YOLO_LAYERS); this config file
 exists so ``--arch yolo-w1a8`` is selectable next to the LM archs.
 """
-from repro.models.yolo import (GRID, INPUT_SIZE, NUM_ANCHORS, NUM_CLASSES,
-                               YOLO_LAYERS, count_gflops, count_params)
+from repro.models.yolo import (GRID, INPUT_SIZE,  # noqa: F401
+                               NUM_ANCHORS, NUM_CLASSES, YOLO_LAYERS,
+                               count_gflops, count_params)
 
 NAME = "yolo-w1a8"
 LAYERS = YOLO_LAYERS

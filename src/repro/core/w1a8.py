@@ -17,13 +17,12 @@ Three execution paths share one algebra:
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import packing
-from repro.core.quant import (ACT_QMAX, binarize_ste, binarize_weight,
+from repro.core.quant import (binarize_ste, binarize_weight,
                               lsq_fake_quant, lsq_grad_scale, quantize_act)
 
 

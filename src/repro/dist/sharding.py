@@ -177,6 +177,27 @@ def tree_shardings(tree, cfg, mesh):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def pipeline_tree_shardings(tree, mesh, num_layers: int,
+                            axis: str = "stage"):
+    """Placement for pipelined training (``launch/train.py --pipeline``):
+    every layer-stacked leaf (leading dim == num_layers, which the stage
+    partition later reshapes to ``(n, L/n, ...)``) shards over the pipeline
+    ``axis`` — so each device's params *and optimizer state* live on their
+    stage shard — and everything else (embed, final norm, step counters)
+    replicates. Applies to params and any optimizer tree derived from them
+    (adamw mu/nu mirror shapes; adafactor vr/vc keep the leading L)."""
+    n = _axsize(mesh, axis)
+
+    def one(leaf):
+        shape = leaf.shape
+        if len(shape) >= 1 and shape[0] == num_layers \
+                and num_layers % n == 0:
+            return NamedSharding(mesh, _spec(len(shape), {0: axis}))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(one, tree)
+
+
 def spec_report(tree, cfg, mesh, *, only_sharded: bool = False) -> str:
     """Human-readable leaf → spec table (debugging / DESIGN.md audits)."""
     lines = []

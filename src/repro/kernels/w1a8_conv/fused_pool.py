@@ -11,7 +11,6 @@ the conv output never exists in HBM, exactly like the RTL stage chain.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -69,8 +68,9 @@ def w1a8_conv3x3_pool2(a_u8: jax.Array, w_packed: jax.Array,
     wp_, hp = w + 2, h + 2
     kernel = functools.partial(_kernel, w_out=w, k9p=k9p, cout=cout,
                                out_step=out_step, compute_dtype=compute_dtype)
-    row = lambda dy: pl.BlockSpec((1, 1, wp_, cin),
-                                  lambda bb, i, dy=dy: (bb, 2 * i + dy, 0, 0))
+    def row(dy):
+        return pl.BlockSpec((1, 1, wp_, cin),
+                            lambda bb, i, dy=dy: (bb, 2 * i + dy, 0, 0))
     return pl.pallas_call(
         kernel,
         grid=(b, h // 2),

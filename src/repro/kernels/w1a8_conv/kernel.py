@@ -66,8 +66,9 @@ def w1a8_conv3x3_pallas(a_pad: jax.Array, w_packed: jax.Array,
     assert w_packed.shape[0] * PACK == k9p
     kernel = functools.partial(_conv_kernel, w_out=w_out, k9p=k9p, cout=cout,
                                out_step=out_step, compute_dtype=compute_dtype)
-    row = lambda dy: pl.BlockSpec((1, 1, wp_, cin),
-                                  lambda bb, i, dy=dy: (bb, i + dy, 0, 0))
+    def row(dy):
+        return pl.BlockSpec((1, 1, wp_, cin),
+                            lambda bb, i, dy=dy: (bb, i + dy, 0, 0))
     out_dtype = jnp.float32 if out_step is None else jnp.uint8
     return pl.pallas_call(
         kernel,

@@ -142,6 +142,9 @@ def measure_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     if skip:
         rec.update(status="skipped", reason=skip)
         return rec
+    if spec.kind == "train":
+        rec["pipeline_bubble"] = dr.pipeline_bubble_record(
+            cfg, microbatches=microbatches)
 
     dtype = jnp.bfloat16 if (arch in dr.BIG or spec.kind != "train") \
         else jnp.float32

@@ -25,6 +25,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro import configs                      # noqa: E402
 from repro.configs.shapes import SHAPES, skip_reason       # noqa: E402
 from repro.dist import sharding as shard_rules  # noqa: E402
+from repro.dist.pipeline import (bubble_fraction,           # noqa: E402
+                                 bubble_fraction_1f1b)
 from repro.launch.mesh import HW, make_production_mesh     # noqa: E402
 from repro.models.transformer import ShardCtx, init_lm_params, lm_forward  # noqa: E402
 from repro.optim import adafactor, adamw       # noqa: E402
@@ -340,6 +342,50 @@ def model_flops(arch: str, shape_name: str) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Pipeline bubble accounting (dist/pipeline helpers)
+# ---------------------------------------------------------------------------
+
+def pipeline_bubble_record(cfg, *, microbatches: int = 8) -> dict:
+    """Schedule idle fractions if this arch's stage stack were pipelined:
+    n = the natural stage partition (num_layers / period), M = the train
+    cell's microbatch count. Reported in every train cell so launch tooling
+    can size num_micro; the schedules themselves live in dist/pipeline."""
+    n = cfg.num_layers // cfg.period
+    return {"stages": n, "num_micro": microbatches,
+            "gpipe_bubble": round(bubble_fraction(n, microbatches), 4),
+            "1f1b_bubble": round(bubble_fraction_1f1b(n, microbatches), 4)}
+
+
+def bubble_table(stages=(4,), micro=(4, 8, 16)) -> list:
+    """gpipe-vs-1f1b idle fractions over (n, M) — the CI-produced source
+    for the BENCH_* bench trajectory (see EXPERIMENTS.md §Pipeline)."""
+    rows = []
+    for n in stages:
+        for m in micro:
+            rows.append({"stages": n, "num_micro": m,
+                         "gpipe_bubble": round(bubble_fraction(n, m), 4),
+                         "1f1b_bubble": round(bubble_fraction_1f1b(n, m), 4)})
+    return rows
+
+
+def write_bubble_table(out_path: str = None) -> str:
+    out_path = out_path or os.path.join(RESULTS_DIR,
+                                        "BENCH_bubble_fraction.json")
+    rows = bubble_table()
+    out_dir = os.path.dirname(out_path)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print("| n | M | gpipe | 1f1b |")
+    print("|---|---|-------|------|")
+    for r in rows:
+        print(f"| {r['stages']} | {r['num_micro']} | {r['gpipe_bubble']:.3f}"
+              f" | {r['1f1b_bubble']:.3f} |")
+    return out_path
+
+
+# ---------------------------------------------------------------------------
 # Runner
 # ---------------------------------------------------------------------------
 
@@ -355,6 +401,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         rec["status"] = "skipped"
         rec["reason"] = skip
         return rec
+    if SHAPES[shape_name].kind == "train":
+        rec["pipeline_bubble"] = pipeline_bubble_record(
+            configs.get_config(arch))
     t0 = time.time()
     with mesh:
         jitted, arg_sds = build_cell(arch, shape_name, mesh, **kw)
@@ -402,7 +451,15 @@ def main():
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--out", default=None)
     ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--bubble-table", action="store_true",
+                    help="write benchmarks/results/BENCH_bubble_fraction"
+                         ".json (gpipe vs 1f1b idle fractions) and exit")
     args = ap.parse_args()
+
+    if args.bubble_table:
+        path = write_bubble_table(args.out)
+        print(f"wrote {path}")
+        return
 
     archs = list(configs.ARCH_NAMES) if args.arch == "all" else [args.arch]
     shapes = list(SHAPES) if args.shape == "all" else [args.shape]

@@ -54,7 +54,6 @@ def nms(boxes: jax.Array, scores: jax.Array, *, iou_thresh: float = 0.45,
     boxes (N, 4), scores (N, C) → (max_out, 4), (max_out,), (max_out,) int32
     class ids; empty slots have score 0 and class -1.
     """
-    n = boxes.shape[0]
     cls_id = jnp.argmax(scores, axis=-1)
     score = jnp.max(scores, axis=-1)
     score = jnp.where(score >= score_thresh, score, 0.0)

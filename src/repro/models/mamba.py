@@ -300,7 +300,6 @@ def mamba1_mixer(p: dict, cfg: ModelConfig, xin: jax.Array, *,
 
 def mamba1_decode_step(p: dict, cfg: ModelConfig, xin: jax.Array,
                        cache: dict, mode: str) -> Tuple[jax.Array, dict]:
-    bsz = xin.shape[0]
     di, n = d_inner(cfg), cfg.ssm_state
     xz = linear(p["in_proj"], xin[:, 0, :], mode)
     xs, z = jnp.split(xz, 2, axis=-1)

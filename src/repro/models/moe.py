@@ -188,7 +188,6 @@ def moe_ffn(p: dict, cfg: ModelConfig, x: jax.Array, *, mode: str,
         buf = buf.reshape(e_local, cap, d)
 
     # --- expert computation (grouped GEMM, W1A8-aware, TP over tp_axis) ----
-    step = p.get("act_step")
     up = _expert_mm(p, "up", buf, mode)
     gate = _expert_mm(p, "gate", buf, mode)
     h = up * _act(cfg.act_fn)(gate)

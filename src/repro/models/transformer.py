@@ -17,7 +17,7 @@ identical math runs single-device (smoke tests).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +28,7 @@ from repro.models import mamba as mb
 from repro.models import moe as moe_mod
 from repro.models.layers import (ModelConfig, attention, embed,
                                  init_attention, init_embed, init_mlp,
-                                 init_norm, linear, mlp, norm, rope, unembed)
+                                 init_norm, mlp, norm, unembed)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -13,7 +13,6 @@ under the paper's full-precision-ops convention (binary ops discounted).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -239,7 +238,6 @@ def deploy_yolo(params: dict) -> dict:
     """Training params → integer deployment artifact (numpy, 'COE' role)."""
     art = {"layers": []}
     steps_next = {}  # step of each layer's *output* = next quant layer's input step
-    order = [s.name for s in YOLO_LAYERS]
     for i, spec in enumerate(YOLO_LAYERS[:-1]):
         nxt = params[YOLO_LAYERS[i + 1].name]
         steps_next[spec.name] = np.asarray(

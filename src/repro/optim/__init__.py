@@ -4,6 +4,6 @@ Adafactor (factored second moment, no first moment by default) exists for
 the ≥398B archs where AdamW's 8 bytes/param of state does not fit the pod —
 see EXPERIMENTS.md §Dry-run memory notes.
 """
-from repro.optim.optimizers import (adafactor, adamw, apply_updates,
-                                    clip_by_global_norm, sgdm)
+from repro.optim.optimizers import (adafactor, adamw,  # noqa: F401
+                                    apply_updates, clip_by_global_norm, sgdm)
 from repro.optim.schedules import cosine_schedule, linear_warmup  # noqa: F401

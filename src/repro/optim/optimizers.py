@@ -10,7 +10,7 @@ All states are pytrees of arrays → checkpointable and shardable like params
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +40,8 @@ def adamw(lr, *, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
     """lr: float or callable(step)->float."""
 
     def init(params):
-        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        def zeros(p):
+            return jnp.zeros_like(p, dtype=jnp.float32)
         return {"mu": tmap(zeros, params), "nu": tmap(zeros, params),
                 "step": jnp.zeros((), jnp.int32)}
 

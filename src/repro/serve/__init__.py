@@ -1,6 +1,7 @@
 """Serving stack: prefill/decode with ring-aware caches, slot-based request
 batching, packed-W1A8 deployment, SP long-context attention."""
-from repro.serve.engine import decode_step, generate, init_cache, prefill
+from repro.serve.engine import (decode_step, generate,  # noqa: F401
+                                init_cache, prefill)
 from repro.serve.packed import deploy_lm, packed_param_bytes  # noqa: F401
 from repro.serve import sp  # noqa: F401
 from repro.serve.batching import ServeEngine  # noqa: F401

@@ -11,7 +11,7 @@ prefills, but the splice keeps the engine simple and exactly correct.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp

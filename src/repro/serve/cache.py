@@ -12,7 +12,6 @@ sequence parallelism — see serve.sp_attention).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,6 @@ import jax.numpy as jnp
 from repro.models import mamba as mb
 from repro.models.layers import (ModelConfig, embed, linear, norm, rope,
                                  unembed)
-from repro.models.transformer import _apply_slot
 
 BIGPOS = jnp.int32(2 ** 30)
 

@@ -13,7 +13,6 @@ Used by the jamba long_500k cell (its 9 attention layers); mamba needs no SP
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,19 +1,29 @@
-"""Train step builder: QAT loss, microbatch grad-accum scan, clip, update.
+"""Train step builders: QAT loss, microbatch grad-accum scan, clip, update.
 
 Gradient accumulation is a `lax.scan` over microbatches — XLA overlaps each
 microbatch's gradient psum (inserted by SPMD for the DP axes) with the next
 microbatch's backward pass, the standard comm/compute overlap. Buffers are
 donated (params/opt_state) by the caller's jit.
+
+:func:`make_pipeline_train_step` is the pipelined variant (DESIGN.md §9):
+body layers partition into ``|stage|`` pipeline stages driven by the
+1F1B/GPipe schedules in ``dist/pipeline``, with the DP gradient reduction
+running over ``dist/collectives.tree_quantized_allreduce`` when the int8
+wire is selected.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
-from repro.models.transformer import lm_forward
+from repro.dist.pipeline import (pipeline_train_local,
+                                 reduce_pipeline_outputs)
+from repro.models.layers import embed, norm, unembed
+from repro.models.transformer import _apply_slot, lm_forward
 from repro.optim import apply_updates, clip_by_global_norm
 
 tmap = jax.tree_util.tree_map
@@ -77,6 +87,108 @@ def make_train_step(cfg, optimizer, *, mode: str = "w1a8_train",
         else:
             loss, grads = grads_of(params, batch)
 
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        updates, opt_state = update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step": opt_state["step"]}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_pipeline_train_step(cfg, optimizer, *, mesh, num_micro: int,
+                             mode: str = "w1a8_train",
+                             schedule: str = "1f1b",
+                             grad_wire: str = "fp32",
+                             max_grad_norm: float = 1.0,
+                             stage_axis: str = "stage",
+                             dp_axis: str = "data"):
+    """Pipelined train_step(params, opt_state, batch) → (params, opt, m).
+
+    The body's ``num_layers`` slots partition into ``n = |stage_axis|``
+    contiguous stages; microbatches stream through the 1F1B (or GPipe)
+    schedule of ``dist.pipeline`` with activations/cotangents hopping
+    between neighbouring stages via collective_permute. The embedding
+    front-end and the final-norm + LM-head loss run outside the pipeline
+    (stage maths must be shape-preserving); the input cotangent returned by
+    the pipeline continues the backward into the embedding. Grads reduce
+    across ``dp_axis`` — int8-on-the-wire when ``grad_wire == 'int8'``.
+    """
+    n = int(mesh.shape[stage_axis])
+    dp_n = int(mesh.shape[dp_axis])
+    if cfg.period != 1:
+        raise ValueError("--pipeline needs a uniform layer stack (period 1);"
+                         f" {cfg.name} has period {cfg.period}")
+    if cfg.encoder_layers or cfg.frontend == "vision":
+        raise ValueError(f"--pipeline does not support {cfg.name}'s "
+                         "encoder/vision front-end")
+    if cfg.ffn_kind(0) == "moe":
+        raise ValueError("--pipeline does not support MoE FFNs yet")
+    if cfg.num_layers % n:
+        raise ValueError(f"{cfg.num_layers} layers do not partition into "
+                         f"{n} pipeline stages")
+    lps = cfg.num_layers // n
+    mk, fk = cfg.mixer_kind(0), cfg.ffn_kind(0)
+    _, update = optimizer
+
+    def stage_fn(w, x):
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        for i in range(lps):
+            slot = tmap(lambda l: l[i], w)
+            x = _apply_slot(slot, cfg, x, mixer_kind=mk, ffn_kind=fk,
+                            mode=mode, positions=positions, ctx=None)
+        return x
+
+    def loss_fn(top, y, aux):
+        h = norm(top["final_norm"], y, cfg.norm_kind)
+        logits = unembed(top["embed"], cfg, h).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, aux["labels"][..., None],
+                                   -1)[..., 0]
+        zloss = 1e-4 * jnp.mean(jax.scipy.special.logsumexp(logits, -1) ** 2)
+        return jnp.mean(nll) + zloss
+
+    local = pipeline_train_local(stage_fn, loss_fn, axis=stage_axis,
+                                 num_stages=n, num_micro=num_micro,
+                                 schedule=schedule)
+
+    def train_step(params, opt_state, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        bsz = tokens.shape[0]
+        if bsz % dp_n or (bsz // dp_n) % num_micro:
+            raise ValueError(f"global batch {bsz} must split into {dp_n} DP"
+                             f" shards × {num_micro} microbatches")
+        x, f_emb = jax.vjp(lambda e: embed(e, tokens), params["embed"])
+        ws = tmap(lambda l: l.reshape((n, lps) + l.shape[1:]),
+                  params["slots"][0])
+        top = {"embed": params["embed"], "final_norm": params["final_norm"]}
+
+        def prog(ws_l, top_l, x_l, lab_l):
+            mbs = x_l.shape[0] // num_micro
+            xm = x_l.reshape((num_micro, mbs) + x_l.shape[1:])
+            lm = lab_l.reshape((num_micro, mbs) + lab_l.shape[1:])
+            out = local(ws_l, top_l, xm, {"labels": lm})
+            loss, gw, gtop, dxs = reduce_pipeline_outputs(
+                *out, axis=stage_axis, dp_axis=dp_axis, grad_wire=grad_wire)
+            return (loss, tmap(lambda g: g[None], gw), gtop,
+                    dxs.reshape(x_l.shape))
+
+        w_specs = tmap(lambda l: P(stage_axis, *([None] * (l.ndim - 1))),
+                       ws)
+        t_specs = tmap(lambda l: P(), top)
+        loss, gws, gtop, dx = jax.shard_map(
+            prog, mesh=mesh,
+            in_specs=(w_specs, t_specs, P(dp_axis, None, None),
+                      P(dp_axis, None)),
+            out_specs=(P(), w_specs, t_specs, P(dp_axis, None, None)),
+            check_vma=False)(ws, top, x, labels)
+        (g_emb_front,) = f_emb(dx)
+        grads = {"embed": tmap(jnp.add, gtop["embed"], g_emb_front),
+                 "final_norm": gtop["final_norm"],
+                 "slots": (tmap(lambda g: g.reshape((cfg.num_layers,)
+                                                    + g.shape[2:]), gws),)}
         grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
         updates, opt_state = update(grads, opt_state, params)
         params = apply_updates(params, updates)

@@ -6,8 +6,6 @@ tw,th at assigned cells, BCE on objectness and classes.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

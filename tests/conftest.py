@@ -1,11 +1,28 @@
-"""Import jax before any test module: repro.launch.{dryrun,costs} only force
-the 512-device XLA flag when jax is not yet imported (fresh script runs), so
-touching jax here pins the test session to the real 1-device CPU backend."""
-import jax  # noqa: F401
+"""Session-wide jax setup, imported before any test module.
+
+Two jobs:
+
+* Force the 16-device host platform pool (the same ``XLA_FLAGS`` the CI
+  environment exports) *before* jax initialises, so single-process tests
+  can build real multi-device meshes (tests/test_pipeline_unit.py) without
+  a subprocess. An externally-provided device-count flag wins.
+* Import jax eagerly: ``repro.launch.{dryrun,costs}`` only force their
+  512-device pool when jax is not yet imported (fresh script runs), so
+  touching jax here pins the test session's device count.
+"""
+
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16 " + _flags
+
+import jax  # noqa: E402, F401
 
 
 class FakeProdMesh:
-    """Production-sized (16, 16) mesh stand-in for sharding-rule tests —
+    """Production-sized (16, 16) mesh stand-in for sharding-rule tests --
     shapes only, no devices (param_spec never touches device state)."""
+
     axis_names = ("data", "model")
     shape = {"data": 16, "model": 16}

@@ -7,6 +7,10 @@ devices (tests/test_dist.py shells out to this). Asserts:
   4. int8-quantized all-reduce ≈ exact mean (< 1% rel err)
   5. sharded W1A8 train step ≡ single-device step (same loss)
   6. SP (context-parallel) decode attention ≡ dense attention
+  7. 1F1B/GPipe pipelined *training* ≡ sequential jax.grad oracle
+     (loss + grads ≤ 1e-5 rel err), int8-wire DP grads in envelope
+  8. pipelined LM train step (train/step.make_pipeline_train_step)
+     ≡ single-device make_train_step (same loss)
 """
 import os
 
@@ -17,19 +21,19 @@ import dataclasses  # noqa: E402
 
 import jax          # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro import configs  # noqa: E402
 from repro.dist.collectives import tree_quantized_allreduce  # noqa: E402
-from repro.dist.pipeline import gpipe  # noqa: E402
+from repro.dist.pipeline import (gpipe, pipeline_train_reference,  # noqa: E402
+                                 pipeline_train_step)
 from repro.dist import sharding as shard_rules  # noqa: E402
 from repro.models import moe as moe_mod  # noqa: E402
 from repro.models.layers import ModelConfig  # noqa: E402
-from repro.models.transformer import (ShardCtx, init_lm_params,  # noqa: E402
-                                      lm_forward)
+from repro.models.transformer import ShardCtx, init_lm_params  # noqa: E402
 from repro.optim import sgdm  # noqa: E402
-from repro.train.step import make_train_step  # noqa: E402
+from repro.train.step import (make_pipeline_train_step,  # noqa: E402
+                              make_train_step)
 
 
 def check_moe_ep():
@@ -128,6 +132,93 @@ def check_sharded_train_step():
     print(f"5. sharded train step OK (loss diff {diff:.2e})")
 
 
+def _tree_rel_err(got, want) -> float:
+    d = jnp.sqrt(sum(jnp.sum((a - b) ** 2) for a, b in
+                     zip(jax.tree_util.tree_leaves(got),
+                         jax.tree_util.tree_leaves(want))))
+    n = jnp.sqrt(sum(jnp.sum(b ** 2)
+                     for b in jax.tree_util.tree_leaves(want)))
+    return float(d / n)
+
+
+def check_pipeline_train():
+    mesh = jax.make_mesh((4, 4), ("stage", "data"))
+    n, num_micro, mb, d = 4, 8, 2, 16
+    key = jax.random.PRNGKey(8)
+    ws = {"w": jax.random.normal(key, (n, d, d)) * 0.3,
+          "b": jax.random.normal(jax.random.fold_in(key, 1), (n, d)) * 0.1}
+    top = {"head": jax.random.normal(jax.random.fold_in(key, 2),
+                                     (d, d)) * 0.2}
+
+    def stage_fn(w, x):
+        return jnp.tanh(x @ w["w"] + w["b"])
+
+    def loss_fn(tp, y, aux):
+        return jnp.mean((y @ tp["head"] - aux["tgt"]) ** 2)
+
+    x = jax.random.normal(jax.random.fold_in(key, 3), (num_micro, mb, d))
+    aux = {"tgt": jax.random.normal(jax.random.fold_in(key, 4),
+                                    (num_micro, mb, d))}
+    l_ref, g_ref, gt_ref, dx_ref = pipeline_train_reference(
+        stage_fn, loss_fn, ws, x, aux=aux, top=top)
+    for sched in ("1f1b", "gpipe"):
+        f = pipeline_train_step(stage_fn, loss_fn, mesh=mesh, axis="stage",
+                                num_micro=num_micro, schedule=sched)
+        with mesh:
+            loss, gws, gtop, dx = f(ws, x, aux=aux, top=top)
+        rel = max(_tree_rel_err(gws, g_ref), _tree_rel_err(gtop, gt_ref),
+                  _tree_rel_err(dx, dx_ref),
+                  abs(float(loss) - float(l_ref)) / abs(float(l_ref)))
+        assert rel < 1e-5, f"pipeline train ({sched}): rel err {rel}"
+
+    # DP composition: mb shards over 'data', grads ride the int8 wire
+    x = jax.random.normal(jax.random.fold_in(key, 5), (num_micro, 8, d))
+    aux = {"tgt": jax.random.normal(jax.random.fold_in(key, 6),
+                                    (num_micro, 8, d))}
+    ref = pipeline_train_reference(stage_fn, loss_fn, ws, x, aux=aux,
+                                   top=top)
+    for wire, tol in (("fp32", 1e-5), ("int8", 0.03)):
+        f = pipeline_train_step(stage_fn, loss_fn, mesh=mesh, axis="stage",
+                                num_micro=num_micro, dp_axis="data",
+                                grad_wire=wire)
+        with mesh:
+            loss, gws, gtop, _ = f(ws, x, aux=aux, top=top)
+        rel = max(_tree_rel_err(gws, ref[1]), _tree_rel_err(gtop, ref[2]))
+        assert abs(float(loss) - float(ref[0])) < 1e-5, (wire, loss)
+        assert rel < tol, f"pipeline train dp ({wire}): rel err {rel}"
+    print("7. 1F1B/GPipe pipelined training ≡ jax.grad oracle OK "
+          "(int8-wire DP grads in envelope)")
+
+
+def check_pipeline_lm_train_step():
+    import dataclasses
+    cfg = dataclasses.replace(configs.get_reduced("qwen2.5-14b"))
+    params = init_lm_params(jax.random.PRNGKey(9), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(10), (16, 16), 0,
+                              cfg.vocab_size, jnp.int32)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    opt = sgdm(1e-2)
+    s_ref = make_train_step(cfg, opt, remat=False)
+    _, _, m_ref = s_ref(params, opt[0](params), batch)
+
+    mesh = jax.make_mesh((8, 2), ("data", "stage"))
+    p_sh = shard_rules.pipeline_tree_shardings(params, mesh,
+                                               cfg.num_layers)
+    s_pipe = jax.jit(make_pipeline_train_step(cfg, opt, mesh=mesh,
+                                              num_micro=2,
+                                              grad_wire="int8"))
+    with mesh:
+        _, _, m = s_pipe(jax.device_put(params, p_sh),
+                         jax.device_put(opt[0](params),
+                                        shard_rules.pipeline_tree_shardings(
+                                            opt[0](params), mesh,
+                                            cfg.num_layers)),
+                         batch)
+    diff = abs(float(m["loss"]) - float(m_ref["loss"]))
+    assert diff < 5e-3, f"pipelined LM train loss diff {diff}"
+    print(f"8. pipelined LM train step OK (loss diff {diff:.2e})")
+
+
 def check_sp_attention():
     from repro.serve.sp import sp_decode_attention
     mesh = jax.make_mesh((16,), ("data",))
@@ -154,4 +245,6 @@ if __name__ == "__main__":
     check_quantized_allreduce()
     check_sharded_train_step()
     check_sp_attention()
+    check_pipeline_train()
+    check_pipeline_lm_train_step()
     print("ALL DIST CHECKS PASSED")

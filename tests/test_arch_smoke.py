@@ -4,8 +4,6 @@ step on CPU, asserting output shapes and finiteness (no NaNs).
 Also checks that the FULL configs' parameter counts land near the published
 sizes (structure-level fidelity of the configs).
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -13,8 +11,7 @@ import pytest
 
 from repro import configs
 from repro.configs.shapes import SHAPES, applicable_shapes
-from repro.models.transformer import (count_lm_params, init_lm_params,
-                                      lm_forward)
+from repro.models.transformer import init_lm_params, lm_forward
 
 BATCH, SEQ = 2, 16
 

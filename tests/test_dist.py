@@ -5,11 +5,11 @@ import subprocess
 import sys
 
 import jax
-import numpy as np
 
 
 def test_multi_device_suite():
-    """EP MoE, TP-in-expert, GPipe, int8 all-reduce, sharded train, SP attn."""
+    """EP MoE, TP-in-expert, GPipe, int8 all-reduce, sharded train, SP attn,
+    1F1B/GPipe pipelined training vs jax.grad oracle, pipelined LM step."""
     script = os.path.join(os.path.dirname(__file__), "dist_main.py")
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src") \
@@ -18,6 +18,8 @@ def test_multi_device_suite():
                          capture_output=True, text=True, timeout=900)
     assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr[-3000:]}"
     assert "ALL DIST CHECKS PASSED" in res.stdout
+    assert "1F1B/GPipe pipelined training" in res.stdout
+    assert "pipelined LM train step OK" in res.stdout
 
 
 def test_sharding_rules_cover_all_archs():

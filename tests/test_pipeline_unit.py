@@ -1,0 +1,120 @@
+"""Single-process 1F1B/GPipe pipelined-training guards (fast CPU).
+
+Runs on the 16 forced host devices set up by conftest.py -- no subprocess,
+no second jax runtime. The heavyweight end-to-end checks live in
+tests/dist_main.py; these cover the schedule algebra (bubble fraction,
+stash depth), the sequential-oracle match, and the int8-wire gradient
+envelope established in PR 1 (~1.4% rel err on unit-normal grads,
+asserted < 3%).
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.dist.pipeline import (
+    _schedule_constants,
+    bubble_fraction,
+    bubble_fraction_1f1b,
+    pipeline_train_reference,
+    pipeline_train_step,
+)
+
+needs_devices = pytest.mark.skipif(
+    len(jax.devices()) < 16,
+    reason="needs the forced 16-device host platform (see conftest.py)",
+)
+
+
+def _stage_fn(w, x):
+    return jnp.tanh(x @ w["w"] + w["b"])
+
+
+def _loss_fn(top, y, aux):
+    return jnp.mean((y @ top["head"] - aux["tgt"]) ** 2)
+
+
+def _toy(n, num_micro, mb, d=16):
+    key = jax.random.PRNGKey(0)
+    ws = {
+        "w": jax.random.normal(key, (n, d, d)) * 0.3,
+        "b": jax.random.normal(jax.random.fold_in(key, 1), (n, d)) * 0.1,
+    }
+    head = jax.random.normal(jax.random.fold_in(key, 2), (d, d))
+    x = jax.random.normal(jax.random.fold_in(key, 3), (num_micro, mb, d))
+    tgt = jax.random.normal(jax.random.fold_in(key, 4), (num_micro, mb, d))
+    return ws, {"head": head * 0.2}, x, {"tgt": tgt}
+
+
+def _rel(got, want):
+    got_l = jax.tree_util.tree_leaves(got)
+    want_l = jax.tree_util.tree_leaves(want)
+    d = jnp.sqrt(sum(jnp.sum((a - b) ** 2) for a, b in zip(got_l, want_l)))
+    nrm = jnp.sqrt(sum(jnp.sum(b**2) for b in want_l))
+    return float(d / nrm)
+
+
+def test_bubble_fraction_drops_vs_gpipe():
+    # same (n, M): the 1F1B span is M+2n-1 ticks vs GPipe's 2(M+n-1)
+    for num_micro in (4, 8, 16):
+        gp = bubble_fraction(4, num_micro)
+        ob = bubble_fraction_1f1b(4, num_micro)
+        assert ob < gp, (num_micro, ob, gp)
+    assert bubble_fraction_1f1b(1, 8) == 0.0
+    assert bubble_fraction_1f1b(4, 32) < bubble_fraction_1f1b(4, 8)
+
+
+def test_1f1b_stash_depth_is_o_n_not_o_m():
+    assert _schedule_constants(4, 64, "1f1b")["ring"] == 7
+    assert _schedule_constants(4, 64, "gpipe")["ring"] == 64
+    assert _schedule_constants(4, 4, "1f1b")["ring"] == 4
+    with pytest.raises(ValueError):
+        _schedule_constants(4, 4, "zb-h1")
+
+
+@needs_devices
+@pytest.mark.parametrize("schedule", ["1f1b", "gpipe"])
+def test_pipeline_train_matches_oracle(schedule):
+    n, num_micro = 4, 8
+    ws, top, x, aux = _toy(n, num_micro, mb=2)
+    loss_ref, gws_ref, gtop_ref, dx_ref = pipeline_train_reference(
+        _stage_fn, _loss_fn, ws, x, aux=aux, top=top
+    )
+    mesh = jax.make_mesh((n,), ("stage",))
+    step = pipeline_train_step(
+        _stage_fn,
+        _loss_fn,
+        mesh=mesh,
+        axis="stage",
+        num_micro=num_micro,
+        schedule=schedule,
+    )
+    with mesh:
+        loss, gws, gtop, dx = step(ws, x, aux=aux, top=top)
+    assert abs(float(loss) - float(loss_ref)) / abs(float(loss_ref)) < 1e-5
+    assert _rel(gws, gws_ref) < 1e-5
+    assert _rel(gtop, gtop_ref) < 1e-5
+    assert _rel(dx, dx_ref) < 1e-5
+
+
+@needs_devices
+@pytest.mark.parametrize("wire,tol", [("fp32", 1e-5), ("int8", 0.03)])
+def test_dp_grad_wire_envelope(wire, tol):
+    n, num_micro = 2, 4
+    ws, top, x, aux = _toy(n, num_micro, mb=8)
+    ref = pipeline_train_reference(_stage_fn, _loss_fn, ws, x, aux=aux, top=top)
+    mesh = jax.make_mesh((n, 8), ("stage", "data"))
+    step = pipeline_train_step(
+        _stage_fn,
+        _loss_fn,
+        mesh=mesh,
+        axis="stage",
+        num_micro=num_micro,
+        dp_axis="data",
+        grad_wire=wire,
+    )
+    with mesh:
+        loss, gws, gtop, _ = step(ws, x, aux=aux, top=top)
+    assert abs(float(loss) - float(ref[0])) < 1e-5
+    assert _rel(gws, ref[1]) < tol
+    assert _rel(gtop, ref[2]) < tol

@@ -1,6 +1,5 @@
 """Unit tests for the roofline tooling (HLO collective parsing, wire-byte
 formulas, MODEL_FLOPS accounting) — the measurement substrate of §Roofline."""
-import numpy as np
 
 from repro.launch import dryrun as dr
 
@@ -67,6 +66,7 @@ def test_model_flops_swa_bounded():
     base = 2 * 12.9e9                              # active params × 1 token
     assert f < base + attn_full * 0.5              # far below full-context
     assert f > base * 0.9
+    assert f > attn_win                            # window term is in there
 
 
 def test_skip_reasons_match_design():

@@ -7,10 +7,10 @@ import pytest
 
 from repro import configs
 from repro.models.transformer import init_lm_params, lm_forward
-from repro.serve import (ServeEngine, decode_step, deploy_lm, generate,
-                         init_cache, packed_param_bytes, prefill)
+from repro.serve import (ServeEngine, deploy_lm, generate, init_cache,
+                         packed_param_bytes)
 from repro.serve.batching import Request
-from repro.serve.sp import sp_attention_local, sp_combine
+from repro.serve.sp import sp_attention_local
 
 
 def _greedy_via_forward(cfg, params, prompt, n, mode):
