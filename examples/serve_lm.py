@@ -1,7 +1,10 @@
-"""Serving example: continuous batching with 1-bit packed W1A8 weights.
+"""Serving example (serve v2): continuous batching with 1-bit packed W1A8
+weights through the backend-agnostic Scheduler.
 
-Five requests share three slots; the engine prefills each prompt into a free
-slot and decodes all active rows in one fused step per tick.
+Five requests share three slots; the scheduler prefills arrivals as one
+batch per prompt length and decodes all active rows in one fused step per
+tick. Per-request sampling: req 4 samples at temperature 0.8 and stops on
+token 9 while the others decode greedily.
 
 Run: PYTHONPATH=src python examples/serve_lm.py [--arch granite-20b]
 """
@@ -12,8 +15,8 @@ import jax
 
 from repro import configs
 from repro.models.transformer import init_lm_params
-from repro.serve import ServeEngine, deploy_lm, packed_param_bytes
-from repro.serve.batching import Request
+from repro.serve import (LMBackend, SamplingParams, Scheduler, ServeRequest,
+                         deploy_lm, packed_param_bytes)
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="granite-20b")
@@ -27,14 +30,20 @@ acct = packed_param_bytes(packed)
 print(f"deployed {args.arch} (reduced): {acct['packed_bytes']/1e6:.2f} MB "
       f"packed ({acct['ratio']:.1f}x smaller than bf16)")
 
-eng = ServeEngine(cfg, packed, slots=3, max_len=64, mode="w1a8_eval")
-reqs = [Request(rid=i, prompt=[5 + i, 23, 7, 11 + i], max_new=args.max_new)
+sched = Scheduler(LMBackend(cfg, packed, slots=3, max_len=64,
+                            mode="w1a8_eval"))
+reqs = [ServeRequest(rid=i, prompt=[5 + i, 23, 7, 11 + i],
+                     sampling=SamplingParams(
+                         max_new=args.max_new,
+                         temperature=0.8 if i == 4 else 0.0,
+                         stop_tokens=(9,) if i == 4 else ()))
         for i in range(5)]
 t0 = time.time()
-eng.run(list(reqs))
+results = sched.run(reqs)
 dt = time.time() - t0
-tok = sum(len(r.out) for r in reqs)
-print(f"served {len(reqs)} requests / {tok} tokens in {dt:.1f}s "
-      f"({tok/dt:.1f} tok/s on 1 CPU core)")
-for r in reqs:
-    print(f"  req {r.rid}: prompt {r.prompt} → {r.out}")
+s = sched.metrics.summary()
+print(f"served {len(results)} requests / {s['tokens']} tokens in {dt:.1f}s "
+      f"({s['tokens']/dt:.1f} tok/s on 1 CPU core, "
+      f"occupancy {s['batch_occupancy']:.2f})")
+for r in sorted(results, key=lambda r: r.rid):
+    print(f"  req {r.rid} [{r.finish_reason}]: → {r.tokens}")

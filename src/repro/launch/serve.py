@@ -1,33 +1,46 @@
-"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+"""Serving launcher: ``python -m repro.launch.serve --workload {lm,detect}``.
 
-Runs the slot-based continuous-batching engine over a synthetic request
-stream; --packed deploys 1-bit W1A8 weights (the paper's deployed form).
+Drives the serve-v2 Scheduler over a synthetic request stream against one of
+the two backends:
+
+  lm      — continuous-batched decode of an LM arch (--packed deploys 1-bit
+            W1A8 weights, the paper's deployed form, and decodes with them);
+  detect  — the paper's deployed artifact: batched 320×320 image requests
+            through the packed-W1A8 YOLO Pallas path + NMS, with a
+            core.verify alignment check against the float reference.
+
+Writes/merges throughput + latency + occupancy numbers into
+``benchmarks/results/BENCH_serve.json`` (methodology: EXPERIMENTS.md §Serve).
 """
 from __future__ import annotations
 
 import argparse
-import time
+import json
+import pathlib
+
+DEFAULT_OUT = "benchmarks/results/BENCH_serve.json"
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=6)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--packed", action="store_true",
-                    help="deploy 1-bit packed W1A8 weights")
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def _write_bench(path: str, workload: str, record: dict) -> None:
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    data = {}
+    if p.exists():
+        try:
+            data = json.loads(p.read_text())
+        except json.JSONDecodeError:
+            data = {}
+    data[workload] = record
+    p.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+    print(f"[bench] wrote {path} [{workload}]")
 
+
+def run_lm(args) -> dict:
     import jax
     from repro import configs
     from repro.models.transformer import init_lm_params
-    from repro.serve import ServeEngine, deploy_lm, packed_param_bytes
-    from repro.serve.batching import Request
+    from repro.serve import (LMBackend, SamplingParams, Scheduler,
+                             ServeRequest, deploy_lm, packed_param_bytes)
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
            else configs.get_config(args.arch))
@@ -41,18 +54,86 @@ def main():
               f"{acct['ratio']:.1f}x smaller)")
         mode = "w1a8_eval"
 
-    eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
-                      mode=mode, temperature=args.temperature)
-    reqs = [Request(rid=i, prompt=[2 + i, 11, 7 + i % 3], max_new=args.max_new)
+    backend = LMBackend(cfg, params, slots=args.slots, max_len=args.max_len,
+                        mode=mode, seed=args.seed)
+    sched = Scheduler(backend)
+    sp = SamplingParams(max_new=args.max_new, temperature=args.temperature,
+                        stop_tokens=tuple(args.stop_token))
+    reqs = [ServeRequest(rid=i, prompt=[2 + i, 11, 7 + i % 3], sampling=sp)
             for i in range(args.requests)]
-    t0 = time.time()
-    eng.run(list(reqs))
-    dt = time.time() - t0
-    toks = sum(len(r.out) for r in reqs)
-    print(f"served {len(reqs)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s)")
-    for r in reqs[:3]:
-        print(f"  req {r.rid}: {r.prompt} → {r.out[:10]}...")
+    results = sched.run(reqs)
+    summary = sched.metrics.summary()
+    print(f"served {len(results)} requests, {summary['tokens']} tokens in "
+          f"{summary['wall_s']:.2f}s ({summary['tok_per_s']:.1f} tok/s, "
+          f"p50 tick {summary['tick_p50_ms']:.1f} ms, "
+          f"occupancy {summary['batch_occupancy']:.2f})")
+    for r in results[:3]:
+        print(f"  req {r.rid} [{r.finish_reason}]: {r.tokens[:10]}...")
+    return {"arch": args.arch, "reduced": args.reduced, "packed": args.packed,
+            "slots": args.slots, "max_new": args.max_new, **summary}
+
+
+def run_detect(args) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import verify
+    from repro.models import detection, yolo
+    from repro.serve import DetectionBackend, Scheduler, ServeRequest
+
+    n_req = 2 if args.reduced else args.requests
+    rng = np.random.default_rng(args.seed)
+    imgs_u8 = rng.integers(0, 256, (n_req, yolo.INPUT_SIZE, yolo.INPUT_SIZE,
+                                    3), np.uint8)
+    params, art = yolo.build_detector(
+        jax.random.PRNGKey(args.seed),
+        jnp.asarray(imgs_u8[:1], jnp.float32) / 256.0)
+
+    backend = DetectionBackend(art, slots=args.slots)
+    sched = Scheduler(backend)
+    reqs = [ServeRequest(rid=i, image=imgs_u8[i]) for i in range(n_req)]
+    results = sched.run(reqs)
+    summary = sched.metrics.summary()
+
+    # §6.3 alignment of the served (packed/Pallas) path vs float reference
+    ref = np.asarray(yolo.yolo_forward_float(
+        params, jnp.asarray(imgs_u8, jnp.float32) / 256.0), np.float64)
+    served_raw = np.stack([r.detections["raw"] for r in
+                           sorted(results, key=lambda r: r.rid)])
+    rep = verify.compare("serve_detect_raw", served_raw, ref, lsb=0.02)
+    print(rep.row())
+    n_boxes = [len(detection.detections_to_list(
+        r.detections["boxes"], r.detections["scores"],
+        r.detections["classes"])) for r in results]
+    print(f"served {len(results)} images in {summary['wall_s']:.2f}s "
+          f"({summary['img_per_s']:.2f} img/s, p50 tick "
+          f"{summary['tick_p50_ms']:.1f} ms); detections/img {n_boxes}")
+    return {"reduced": args.reduced, "slots": args.slots,
+            "alignment": {"max_abs": rep.max_abs, "mean_abs": rep.mean_abs,
+                          "within_1lsb": rep.within_1lsb},
+            **summary}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", choices=("lm", "detect"), default="lm")
+    ap.add_argument("--arch", default="granite-20b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--packed", action="store_true",
+                    help="deploy 1-bit packed W1A8 weights (lm)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--stop-token", type=int, action="append", default=[],
+                    help="token id ending a request early (repeatable)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    record = run_lm(args) if args.workload == "lm" else run_detect(args)
+    _write_bench(args.out, args.workload, record)
 
 
 if __name__ == "__main__":

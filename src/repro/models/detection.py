@@ -91,3 +91,14 @@ def postprocess(raw: jax.Array, *, iou_thresh: float = 0.45,
                                      score_thresh=score_thresh,
                                      max_out=max_out))(dec["boxes"],
                                                        dec["scores"])
+
+
+def detections_to_list(boxes, scores, classes) -> list:
+    """Static-shape NMS output for ONE image → host-side list of dicts
+    (empty slots dropped) — the wire form of a detection ServeResult."""
+    import numpy as np
+    boxes, scores, classes = (np.asarray(boxes), np.asarray(scores),
+                              np.asarray(classes))
+    keep = scores > 0
+    return [{"box_cxcywh": boxes[i].tolist(), "score": float(scores[i]),
+             "class_id": int(classes[i])} for i in np.flatnonzero(keep)]

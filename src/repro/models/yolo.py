@@ -367,6 +367,18 @@ def deploy_yolo_kernel(params: dict) -> dict:
     return art
 
 
+def build_detector(key: jax.Array, calib_images: jax.Array) -> tuple:
+    """Init + range-calibrate + pack: the serving-deployment recipe.
+
+    calib_images (B, 320, 320, 3) float in [0, 1]. Returns
+    (calibrated float params, deploy_yolo_kernel artifact) — the float
+    params stay the verification oracle for the packed path
+    (core.verify, DESIGN.md §10)."""
+    params = init_yolo_params(key)
+    params = calibrate_yolo(params, calib_images)
+    return params, deploy_yolo_kernel(params)
+
+
 def yolo_forward_kernel(art: dict, images: jax.Array, *,
                         interpret: bool = True) -> jax.Array:
     """Pallas streaming path. images (B,320,320,3) in [0,1] → (B,10,10,75) f32.

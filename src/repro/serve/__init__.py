@@ -1,7 +1,16 @@
-"""Serving stack: prefill/decode with ring-aware caches, slot-based request
-batching, packed-W1A8 deployment, SP long-context attention."""
+"""Serving stack (v2): one backend-agnostic request lifecycle for LM decode
+and W1A8 detection — `ServeRequest` → `Scheduler` → `Backend`
+(admit / step / harvest) → `ServeResult`. Ring-aware caches, batched
+multi-row prefill, packed-W1A8 deployment, SP long-context attention.
+DESIGN.md §10."""
+from repro.serve.api import (Backend, Emission,  # noqa: F401
+                             EngineMetrics, SamplingParams, ServeRequest,
+                             ServeResult)
+from repro.serve.backends import DetectionBackend, LMBackend  # noqa: F401
+from repro.serve.cache import cache_bytes, init_cache, merge_rows  # noqa: F401
 from repro.serve.engine import (decode_step, generate,  # noqa: F401
-                                init_cache, prefill)
+                                prefill)
 from repro.serve.packed import deploy_lm, packed_param_bytes  # noqa: F401
+from repro.serve.scheduler import Scheduler  # noqa: F401
 from repro.serve import sp  # noqa: F401
-from repro.serve.batching import ServeEngine  # noqa: F401
+from repro.serve.batching import Request, ServeEngine  # noqa: F401

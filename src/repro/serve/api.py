@@ -1,0 +1,115 @@
+"""serve v2 public API — one backend-agnostic request lifecycle.
+
+A request enters as a `ServeRequest` (token prompt for LM decode, image for
+W1A8 detection), is assigned a pool slot by the `Scheduler`, flows through a
+`Backend` (admit / step / harvest), and leaves as a `ServeResult`. The
+scheduler owns queueing, stop conditions and metrics; backends own only the
+model computation — so LM decode and YOLO detection serve through the same
+loop (DESIGN.md §10).
+
+Backend protocol (one decode/inference tick per `step`):
+
+    admit(assignments)   stage [(slot, request), ...] into the pool —
+                         batched multi-row prefill for LMs, image staging
+                         for detection. May already produce emissions.
+    step()               advance every active slot by one fused tick.
+    harvest()            drain {slot: [Emission, ...]} produced since the
+                         last harvest, in emission order.
+    release(slot)        scheduler returns a finished slot to the pool.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Protocol, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode controls (LM workloads; detection ignores them)."""
+    max_new: int = 16
+    temperature: float = 0.0          # 0 → greedy
+    stop_tokens: Tuple[int, ...] = ()  # emitting any of these ends the request
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    rid: int
+    prompt: Optional[Sequence[int]] = None      # LM workloads
+    image: Optional[Any] = None                 # detection workloads
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+
+
+@dataclasses.dataclass
+class ServeResult:
+    rid: int
+    finish_reason: str                          # "length" | "stop" | "ok"
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    detections: Optional[dict] = None           # boxes / scores / classes / raw
+    n_ticks: int = 0                            # scheduler ticks slot was held
+
+
+@dataclasses.dataclass
+class Emission:
+    """One unit of backend output for a slot: a token (LM) or a final
+    payload (detection). `final=True` completes the request regardless of
+    its sampling params."""
+    token: Optional[int] = None
+    payload: Optional[dict] = None
+    final: bool = False
+
+
+class Backend(Protocol):
+    capacity: int
+
+    def admit(self, assignments: Sequence[Tuple[int, ServeRequest]]) -> None:
+        ...
+
+    def step(self) -> None:
+        ...
+
+    def harvest(self) -> Dict[int, List[Emission]]:
+        ...
+
+    def release(self, slot: int) -> None:
+        ...
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    """Throughput / latency / occupancy accounting, recorded per tick by the
+    scheduler and summarised into BENCH_serve.json by launch/serve."""
+    capacity: int = 0
+    ticks: int = 0
+    tokens: int = 0
+    images: int = 0
+    submitted: int = 0
+    completed: int = 0
+    tick_s: List[float] = dataclasses.field(default_factory=list)
+    occupancy: List[float] = dataclasses.field(default_factory=list)
+
+    def record_tick(self, dt: float, active: int, *,
+                    tokens: int = 0, images: int = 0) -> None:
+        self.ticks += 1
+        self.tokens += tokens
+        self.images += images
+        self.tick_s.append(float(dt))
+        self.occupancy.append(active / max(self.capacity, 1))
+
+    def summary(self) -> dict:
+        wall = float(sum(self.tick_s))
+        lat = np.asarray(self.tick_s) if self.tick_s else np.zeros(1)
+        return {
+            "ticks": self.ticks,
+            "wall_s": wall,
+            "requests_completed": self.completed,
+            "tokens": self.tokens,
+            "images": self.images,
+            "tok_per_s": self.tokens / wall if wall > 0 else 0.0,
+            "img_per_s": self.images / wall if wall > 0 else 0.0,
+            "tick_p50_ms": 1e3 * float(np.quantile(lat, 0.50)),
+            "tick_p95_ms": 1e3 * float(np.quantile(lat, 0.95)),
+            "batch_occupancy": (float(np.mean(self.occupancy))
+                                if self.occupancy else 0.0),
+        }

@@ -1,0 +1,155 @@
+"""The two `serve.api.Backend` implementations.
+
+`LMBackend` — autoregressive decode over the stage-stacked LM params: one
+fused `decode_step` per tick for every pool row, batched multi-row prefill
+at admission (requests arriving together prefill as one batch per prompt
+length, then scatter into the pool via `cache.merge_rows` — no per-leaf
+shape-matched splice), per-row temperature sampling.
+
+`DetectionBackend` — the paper's deployed workload: batched 320×320 image
+requests through the packed-W1A8 Pallas conv path
+(`models.yolo.yolo_forward_kernel`), detection-head decode + NMS
+(`models.detection.postprocess`). Every admitted image completes in the
+tick after admission (single-shot inference), so slots recycle every tick
+under load.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import ModelConfig
+from repro.serve import cache as cache_mod
+from repro.serve.api import Emission, ServeRequest
+from repro.serve.engine import decode_step, prefill
+
+
+class LMBackend:
+    """Slot-pool LM decode backend (capacity = pool batch B)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 256, mode: str = "float", seed: int = 17):
+        self.cfg, self.params = cfg, params
+        self.capacity, self.max_len, self.mode = slots, max_len, mode
+        self.cache = cache_mod.init_cache(cfg, slots, max_len)
+        self.last_tok = jnp.zeros((slots,), jnp.int32)
+        self.temp = np.zeros((slots,), np.float32)
+        self._active = np.zeros((slots,), bool)
+        self._emissions: Dict[int, List[Emission]] = collections.defaultdict(
+            list)
+        self._step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t,
+                                                         mode=mode))
+        self._key = jax.random.PRNGKey(seed)
+
+    # -- admission: batched multi-row prefill --------------------------------
+    def admit(self, assignments: Sequence[Tuple[int, ServeRequest]]) -> None:
+        by_len: Dict[int, list] = collections.defaultdict(list)
+        for slot, req in assignments:
+            by_len[len(req.prompt)].append((slot, req))
+            self.temp[slot] = req.sampling.temperature
+        for group in by_len.values():
+            rows = [slot for slot, _ in group]
+            prompts = jnp.asarray([list(r.prompt) for _, r in group],
+                                  jnp.int32)
+            logits, cache1 = prefill(self.cfg, self.params, prompts,
+                                     max_len=self.max_len, mode=self.mode)
+            self.cache = cache_mod.merge_rows(self.cache, cache1, rows)
+            first = self._sample(logits, np.asarray(
+                [r.sampling.temperature for _, r in group], np.float32))
+            for i, slot in enumerate(rows):
+                tok = int(first[i])
+                self.last_tok = self.last_tok.at[slot].set(tok)
+                self._active[slot] = True
+                self._emissions[slot].append(Emission(token=tok))
+
+    # -- one fused decode tick -----------------------------------------------
+    def step(self) -> None:
+        if not self._active.any():
+            return
+        logits, self.cache = self._step(self.params, self.cache,
+                                        self.last_tok[:, None])
+        nxt = self._sample(logits, self.temp)
+        self.last_tok = jnp.asarray(nxt, jnp.int32)
+        for slot in np.flatnonzero(self._active):
+            self._emissions[int(slot)].append(Emission(token=int(nxt[slot])))
+
+    def harvest(self) -> Dict[int, List[Emission]]:
+        out = dict(self._emissions)
+        self._emissions = collections.defaultdict(list)
+        return out
+
+    def release(self, slot: int) -> None:
+        self._active[slot] = False
+        self.temp[slot] = 0.0        # stale temp would force sampling forever
+        self._emissions.pop(slot, None)
+
+    # per-row temperature: greedy rows take argmax, sampled rows categorical
+    def _sample(self, logits, temp) -> np.ndarray:
+        greedy = jnp.argmax(logits, -1)
+        t = np.asarray(temp, np.float32)
+        if not (t > 0).any():
+            return np.asarray(greedy, np.int32)
+        self._key, k = jax.random.split(self._key)
+        scaled = logits / jnp.maximum(jnp.asarray(t), 1e-6)[:, None]
+        sampled = jax.random.categorical(k, scaled, -1)
+        return np.asarray(jnp.where(jnp.asarray(t) > 0, sampled, greedy),
+                          np.int32)
+
+
+class DetectionBackend:
+    """Packed-W1A8 YOLO detection backend (single-shot per request).
+
+    ``art`` is a `models.yolo.deploy_yolo_kernel` artifact; images are
+    (320, 320, 3) float in [0, 1] or uint8 raw pixels (divided by 256, the
+    Q0.8 convention). Emissions carry NMS'd detections plus the raw head
+    for verification against the float reference (core.verify).
+    """
+
+    def __init__(self, art: dict, *, slots: int = 4, interpret: bool = True,
+                 iou_thresh: float = 0.45, score_thresh: float = 0.25,
+                 max_out: int = 50):
+        self.art = art
+        self.capacity = slots
+        self.interpret = interpret
+        self.post = dict(iou_thresh=iou_thresh, score_thresh=score_thresh,
+                         max_out=max_out)
+        self._staged: List[Tuple[int, ServeRequest]] = []
+        self._emissions: Dict[int, List[Emission]] = {}
+
+    def admit(self, assignments: Sequence[Tuple[int, ServeRequest]]) -> None:
+        self._staged.extend(assignments)
+
+    def step(self) -> None:
+        if not self._staged:
+            return
+        from repro.models import detection, yolo
+        imgs = jnp.stack([self._to_float(r.image) for _, r in self._staged])
+        raw = yolo.yolo_forward_kernel(self.art, imgs,
+                                       interpret=self.interpret)
+        boxes, scores, classes = detection.postprocess(raw, **self.post)
+        for i, (slot, _) in enumerate(self._staged):
+            payload = {"boxes": np.asarray(boxes[i]),
+                       "scores": np.asarray(scores[i]),
+                       "classes": np.asarray(classes[i]),
+                       "raw": np.asarray(raw[i])}
+            self._emissions.setdefault(slot, []).append(
+                Emission(payload=payload, final=True))
+        self._staged = []
+
+    def harvest(self) -> Dict[int, List[Emission]]:
+        out, self._emissions = self._emissions, {}
+        return out
+
+    def release(self, slot: int) -> None:
+        self._emissions.pop(slot, None)
+
+    @staticmethod
+    def _to_float(image) -> jax.Array:
+        img = jnp.asarray(image)
+        if img.dtype == jnp.uint8:
+            img = img.astype(jnp.float32) / 256.0
+        return img.astype(jnp.float32)

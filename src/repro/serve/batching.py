@@ -1,23 +1,19 @@
-"""Slot-based continuous batching — the request-level serving loop.
+"""Deprecated serve-v1 surface, kept importable for existing callers.
 
-A fixed pool of B slots runs one fused decode_step per tick; requests join
-any free slot (their prompt prefilled into that row's cache lines) and leave
-when finished, without stalling other rows. Per-row `lengths` make the
-attention masks correct across heterogeneous positions.
-
-Row-wise prefill uses a B=1 prefill + cache splice; production would batch
-prefills, but the splice keeps the engine simple and exactly correct.
+`ServeEngine` / `Request` now delegate to the v2 stack
+(`serve.api` + `serve.scheduler` + `serve.backends.LMBackend`); new code
+should use those directly — see DESIGN.md §10.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
-
-import jax
-import jax.numpy as jnp
+import warnings
+from typing import List
 
 from repro.models.layers import ModelConfig
-from repro.serve.engine import decode_step, init_cache, prefill
+from repro.serve.api import SamplingParams, ServeRequest
+from repro.serve.backends import LMBackend
+from repro.serve.scheduler import Scheduler
 
 
 @dataclasses.dataclass
@@ -30,67 +26,66 @@ class Request:
 
 
 class ServeEngine:
+    """Deprecated: thin shim over Scheduler + LMBackend (one global
+    temperature, no stop tokens — the v1 feature set)."""
+
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 256, mode: str = "float",
                  temperature: float = 0.0):
+        warnings.warn("serve.batching.ServeEngine is deprecated; use "
+                      "serve.Scheduler with serve.LMBackend",
+                      DeprecationWarning, stacklevel=2)
         self.cfg, self.params = cfg, params
         self.slots, self.max_len, self.mode = slots, max_len, mode
         self.temperature = temperature
-        self.cache = init_cache(cfg, slots, max_len)
-        self.active: Dict[int, Request] = {}      # slot → request
-        self.last_tok = jnp.zeros((slots,), jnp.int32)
-        self._step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t,
-                                                         mode=mode))
-        self._key = jax.random.PRNGKey(17)
+        self.backend = LMBackend(cfg, params, slots=slots, max_len=max_len,
+                                 mode=mode)
+        self.scheduler = Scheduler(self.backend)
+        self._by_rid = {}
 
-    # -- request admission ---------------------------------------------------
+    @property
+    def active(self):
+        """v1 view: slot → the caller's Request (token stream on .out)."""
+        return {slot: self._by_rid[rec.req.rid]
+                for slot, rec in self.scheduler.active.items()}
+
     def add_request(self, req: Request) -> bool:
-        free = [s for s in range(self.slots) if s not in self.active]
-        if not free:
+        if not self.scheduler.free:
             return False
-        slot = free[0]
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        logits, cache1 = prefill(self.cfg, self.params, prompt,
-                                 max_len=self.max_len, mode=self.mode)
-        # splice row `slot` of the pool cache from the B=1 prefill cache
-        def splice(pool, one):
-            return pool.at[:, slot] .set(one[:, 0]) \
-                if pool.ndim >= 2 and pool.shape[1] == self.slots else pool
-        new_slots = []
-        for pool_c, one_c in zip(self.cache["slots"], cache1["slots"]):
-            new_slots.append(jax.tree_util.tree_map(splice, pool_c, one_c))
-        self.cache = {"slots": tuple(new_slots),
-                      "lengths": self.cache["lengths"].at[slot]
-                      .set(prompt.shape[1])}
-        self.last_tok = self.last_tok.at[slot].set(
-            int(jnp.argmax(logits[0])))
-        self.active[slot] = req
+        self._by_rid[req.rid] = req
+        self.scheduler.submit(ServeRequest(
+            rid=req.rid, prompt=req.prompt,
+            sampling=SamplingParams(max_new=req.max_new,
+                                    temperature=self.temperature)))
+        self.scheduler.admit()
         return True
 
-    # -- one decode tick -----------------------------------------------------
     def step(self):
-        if not self.active:
+        if not self.scheduler.active:
             return
-        for slot, req in self.active.items():
-            req.out.append(int(self.last_tok[slot]))
-        logits, self.cache = self._step(self.params, self.cache,
-                                        self.last_tok[:, None])
-        if self.temperature > 0:
-            self._key, k = jax.random.split(self._key)
-            nxt = jax.random.categorical(k, logits / self.temperature, -1)
-        else:
-            nxt = jnp.argmax(logits, -1)
-        self.last_tok = nxt.astype(jnp.int32)
-        for slot in list(self.active):
-            req = self.active[slot]
-            if len(req.out) >= req.max_new:
-                req.done = True
-                del self.active[slot]
+        self.scheduler.step_harvest()
+        self._sync()
 
     def run(self, requests: List[Request]):
         queue = list(requests)
-        while queue or self.active:
+        while queue or self.scheduler.active:
             while queue and self.add_request(queue[0]):
                 queue.pop(0)
             self.step()
+        self._sync()
         return requests
+
+    def _sync(self):
+        # Mid-flight .out streams like v1 but may run one token ahead: the
+        # prefill token and the first decode token land in the same step()
+        # harvest here, where v1 surfaced them on consecutive steps. Final
+        # token lists are identical.
+        for rec in self.scheduler.active.values():
+            req = self._by_rid.get(rec.req.rid)
+            if req is not None:
+                req.out = list(rec.tokens)
+        for res in self.scheduler.results:
+            req = self._by_rid.get(res.rid)
+            if req is not None and not req.done:
+                req.out = list(res.tokens)
+                req.done = True

@@ -1,23 +1,43 @@
-"""KV / SSM decode caches with static shapes (slot-based batching).
+"""KV / SSM decode caches with static shapes — the single cache module.
 
 Layout: one cache entry per layer-slot, stacked over stages like the params
-(consumed by the same lax.scan). Attention caches are (stages, B, S_max,
-KV, hd) ×2; mamba caches are the O(1) recurrent states. Per-row `lengths`
-(B,) drive causal masking, so rows at different positions coexist in one
-batch (continuous batching).
+(consumed by the same lax.scan). Attention caches are **ring buffers**
+(stages, B, L, KV, hd) ×2 plus a `pos` plane recording the absolute position
+written at each ring slot; L = min(max_len, sliding_window) for windowed
+archs, so mixtral's long_500k decode keeps 4096 slots/layer instead of
+524288 (128× cache memory — DESIGN.md §5). Mamba caches are the O(1)
+recurrent states. Per-row `lengths` (B,) drive causal masking, so rows at
+different positions coexist in one batch (continuous batching).
+
+Every leaf under ``cache["slots"]`` carries the batch on axis 1 (after the
+stage-stacking axis) and ``cache["lengths"]`` on axis 0 — `merge_rows`
+relies on that invariant to scatter freshly prefilled rows into the serving
+pool without per-leaf shape guessing (the bug surface of the old splice).
 
 Sharding: batch over DP axes, kv-heads over "model" when divisible; for the
 long_500k cells the KV sequence dim shards over "data" instead (context /
-sequence parallelism — see serve.sp_attention).
+sequence parallelism — see serve.sp).
 """
 from __future__ import annotations
 
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import mamba as mb
 from repro.models.layers import ModelConfig
+
+# Unwritten ring slots carry this sentinel position: always masked out by the
+# `pc <= pos` validity test in engine._attn_decode.
+BIGPOS = jnp.int32(2 ** 30)
+
+
+def _attn_cache_len(cfg: ModelConfig, kind: str, max_len: int) -> int:
+    window = 0
+    if kind == "attn_local" or (cfg.sliding_window and not cfg.local_global):
+        window = cfg.sliding_window
+    return min(max_len, window) if window else max_len
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
@@ -28,19 +48,36 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     for i in range(cfg.period):
         kind = cfg.mixer_kind(i)
         if kind.startswith("attn"):
-            shape = (n_stages, batch, max_len, cfg.num_kv_heads, cfg.hd)
+            length = _attn_cache_len(cfg, kind, max_len)
+            shape = (n_stages, batch, length, cfg.num_kv_heads, cfg.hd)
             slots.append({"k": jnp.zeros(shape, dtype),
-                          "v": jnp.zeros(shape, dtype)})
+                          "v": jnp.zeros(shape, dtype),
+                          "pos": jnp.full((n_stages, batch, length), BIGPOS)})
         else:
             one = mb.init_mamba_cache(cfg, batch, dtype)
             slots.append(jax.tree_util.tree_map(
-                lambda x: jnp.broadcast_to(x[None], (n_stages,) + x.shape)
-                .copy() if hasattr(x, "shape") else x, one))
-    cache = {"slots": tuple(slots),
-             "lengths": jnp.zeros((batch,), jnp.int32)}
-    if cfg.encoder_layers:
-        cache["enc_out"] = jnp.zeros((batch, max_len, cfg.d_model), dtype)
-    return cache
+                lambda x: jnp.zeros((n_stages,) + x.shape, x.dtype), one))
+    return {"slots": tuple(slots),
+            "lengths": jnp.zeros((batch,), jnp.int32)}
+
+
+def merge_rows(pool: dict, new: dict, rows: Sequence[int]) -> dict:
+    """Scatter rows of a freshly prefilled cache into the serving pool.
+
+    ``new`` is an init_cache/prefill cache of batch k; ``rows`` names the k
+    pool rows (slots) to overwrite. Uses the structural invariant above —
+    batch axis 1 under "slots", axis 0 for "lengths" — instead of matching
+    leaves by shape.
+    """
+    idx = jnp.asarray(rows, jnp.int32)
+
+    def scatter(p, n):
+        return p.at[:, idx].set(n.astype(p.dtype))
+
+    slots = tuple(jax.tree_util.tree_map(scatter, pc, nc)
+                  for pc, nc in zip(pool["slots"], new["slots"]))
+    return {"slots": slots,
+            "lengths": pool["lengths"].at[idx].set(new["lengths"])}
 
 
 def cache_bytes(cfg: ModelConfig, batch: int, max_len: int,

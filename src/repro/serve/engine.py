@@ -21,39 +21,7 @@ import jax.numpy as jnp
 from repro.models import mamba as mb
 from repro.models.layers import (ModelConfig, embed, linear, norm, rope,
                                  unembed)
-
-BIGPOS = jnp.int32(2 ** 30)
-
-
-# ---------------------------------------------------------------------------
-# Cache (ring-aware)
-# ---------------------------------------------------------------------------
-
-def _attn_cache_len(cfg: ModelConfig, kind: str, max_len: int) -> int:
-    window = 0
-    if kind == "attn_local" or (cfg.sliding_window and not cfg.local_global):
-        window = cfg.sliding_window
-    return min(max_len, window) if window else max_len
-
-
-def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=jnp.float32) -> dict:
-    n_stages = cfg.num_layers // cfg.period
-    slots = []
-    for i in range(cfg.period):
-        kind = cfg.mixer_kind(i)
-        if kind.startswith("attn"):
-            length = _attn_cache_len(cfg, kind, max_len)
-            shape = (n_stages, batch, length, cfg.num_kv_heads, cfg.hd)
-            slots.append({"k": jnp.zeros(shape, dtype),
-                          "v": jnp.zeros(shape, dtype),
-                          "pos": jnp.full((n_stages, batch, length), BIGPOS)})
-        else:
-            one = mb.init_mamba_cache(cfg, batch, dtype)
-            slots.append(jax.tree_util.tree_map(
-                lambda x: jnp.zeros((n_stages,) + x.shape, x.dtype), one))
-    return {"slots": tuple(slots),
-            "lengths": jnp.zeros((batch,), jnp.int32)}
+from repro.serve.cache import BIGPOS, init_cache  # noqa: F401  (re-export)
 
 
 # ---------------------------------------------------------------------------

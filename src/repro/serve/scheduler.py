@@ -1,0 +1,122 @@
+"""Request scheduler — admission queueing, stop conditions, metrics.
+
+One `tick` = admit (fill every free slot from the FIFO queue, one batched
+backend.admit call) → backend.step (one fused compute tick) → harvest
+(ingest emissions in order, finish requests on stop-token / max_new /
+final-payload, recycle their slots).
+
+Invariants:
+  * a slot is in exactly one of {free, active} between ticks;
+  * emissions for one slot are ingested in emission order, and everything
+    after the finishing emission is dropped (a fused decode tick may
+    overrun a request's stop condition by one token);
+  * admission order is FIFO — results surface in completion order, rid-keyed.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+from repro.serve.api import (Backend, EngineMetrics, ServeRequest,
+                             ServeResult)
+
+
+@dataclasses.dataclass
+class _Active:
+    req: ServeRequest
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    payload: Optional[dict] = None
+    admitted_tick: int = 0
+
+
+class Scheduler:
+    def __init__(self, backend: Backend, *,
+                 metrics: Optional[EngineMetrics] = None):
+        self.backend = backend
+        self.metrics = metrics or EngineMetrics(capacity=backend.capacity)
+        self.metrics.capacity = backend.capacity
+        self.queue: collections.deque = collections.deque()
+        self.free: List[int] = list(range(backend.capacity))
+        self.active: Dict[int, _Active] = {}
+        self.results: List[ServeResult] = []
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, req: ServeRequest) -> None:
+        self.queue.append(req)
+        self.metrics.submitted += 1
+
+    # -- one scheduling tick -------------------------------------------------
+    def admit(self) -> int:
+        """Fill free slots from the queue; one batched backend.admit call.
+        Returns the number of requests admitted."""
+        batch = []
+        while self.queue and self.free:
+            slot = self.free.pop(0)
+            req = self.queue.popleft()
+            batch.append((slot, req))
+            self.active[slot] = _Active(req, admitted_tick=self.metrics.ticks)
+        if batch:
+            self.backend.admit(batch)
+        return len(batch)
+
+    def step_harvest(self, t0: Optional[float] = None) -> None:
+        """One backend compute tick + emission ingest / completion. ``t0``
+        lets tick() charge admission (batched prefill) to this tick's
+        latency — EXPERIMENTS.md §Serve numbers are end-to-end."""
+        if t0 is None:
+            t0 = time.perf_counter()
+        active_now = len(self.active)
+        self.backend.step()
+        tokens = images = 0
+        for slot, ems in sorted(self.backend.harvest().items()):
+            rec = self.active.get(slot)
+            if rec is None:
+                continue
+            finish = None
+            for em in ems:
+                if em.final:
+                    rec.payload = em.payload
+                    images += 1
+                    finish = "ok"
+                    break
+                rec.tokens.append(int(em.token))
+                tokens += 1
+                sp = rec.req.sampling
+                if em.token in sp.stop_tokens:
+                    finish = "stop"
+                    break
+                if len(rec.tokens) >= sp.max_new:
+                    finish = "length"
+                    break
+            if finish:
+                self._finish(slot, finish)
+        self.metrics.record_tick(time.perf_counter() - t0, active_now,
+                                 tokens=tokens, images=images)
+
+    def tick(self) -> None:
+        t0 = time.perf_counter()
+        self.admit()
+        self.step_harvest(t0=t0)
+
+    # -- driving -------------------------------------------------------------
+    def run(self, requests=None) -> List[ServeResult]:
+        """Serve until queue and pool drain; returns completion-ordered
+        results (also kept on self.results)."""
+        for req in requests or ():
+            self.submit(req)
+        start = len(self.results)
+        while self.queue or self.active:
+            self.tick()
+        return self.results[start:]
+
+    def _finish(self, slot: int, reason: str) -> None:
+        rec = self.active.pop(slot)
+        self.results.append(ServeResult(
+            rid=rec.req.rid, finish_reason=reason, tokens=rec.tokens,
+            detections=rec.payload,
+            n_ticks=self.metrics.ticks - rec.admitted_tick + 1))
+        self.metrics.completed += 1
+        self.backend.release(slot)
+        self.free.append(slot)

@@ -1,5 +1,6 @@
 """Serving tests: decode≡forward consistency, ring cache, packed W1A8,
-SP attention combine, continuous batching."""
+SP attention combine, continuous batching, and the serve-v2 scheduler
+(stop tokens, per-request sampling, batched multi-row prefill)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,8 +8,9 @@ import pytest
 
 from repro import configs
 from repro.models.transformer import init_lm_params, lm_forward
-from repro.serve import (ServeEngine, deploy_lm, generate, init_cache,
-                         packed_param_bytes)
+from repro.serve import (LMBackend, SamplingParams, Scheduler, ServeEngine,
+                         ServeRequest, cache_bytes, deploy_lm, generate,
+                         init_cache, merge_rows, packed_param_bytes)
 from repro.serve.batching import Request
 from repro.serve.sp import sp_attention_local
 
@@ -112,12 +114,101 @@ def test_sp_attention_matches_dense():
     np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=1e-5)
 
 
+def test_ring_decode_wraparound_past_window():
+    """Ring writes wrap pos % L several times past the window boundary;
+    decode must still match the full (window-masked) forward."""
+    cfg = configs.get_reduced("mixtral-8x7b")        # sliding_window=8
+    params = init_lm_params(jax.random.PRNGKey(9), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(10), (1, 5), 0,
+                                cfg.vocab_size, jnp.int32)
+    n = 16                                           # pos reaches 20 = 2.5 rings
+    want = _greedy_via_forward(cfg, params, prompt, n, "float")
+    got = generate(cfg, params, prompt, max_new=n, max_len=64, mode="float")
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_cache_single_module_ring_and_bytes():
+    """One cache module: init_cache is ring-aware and cache_bytes reflects
+    the window-bounded (not max_len-bounded) KV footprint."""
+    cfg = configs.get_reduced("mixtral-8x7b")        # sliding_window=8
+    ring = cache_bytes(cfg, 2, 256)
+    assert ring == cache_bytes(cfg, 2, 8192)         # bounded by the window
+    pool = init_cache(cfg, 3, 32)
+    fresh = init_cache(cfg, 2, 32)
+    fresh = {"slots": fresh["slots"],
+             "lengths": jnp.asarray([7, 9], jnp.int32)}
+    merged = merge_rows(pool, fresh, [2, 0])
+    assert merged["lengths"].tolist() == [9, 0, 7]
+
+
+def test_scheduler_stop_token_terminates_early():
+    """SamplingParams.stop_tokens ends decode before max_new (regression:
+    requests used to always run to max_new)."""
+    cfg = configs.get_reduced("granite-20b")
+    params = init_lm_params(jax.random.PRNGKey(6), cfg)
+    prompt = [1, 2, 3]
+    oracle = [int(t) for t in _greedy_via_forward(
+        cfg, params, jnp.asarray(prompt, jnp.int32)[None], 6, "float")[0]]
+    stop = oracle[2]
+    expect = oracle[:oracle.index(stop) + 1]
+    sched = Scheduler(LMBackend(cfg, params, slots=2, max_len=32))
+    [res] = sched.run([ServeRequest(rid=0, prompt=prompt,
+                                    sampling=SamplingParams(
+                                        max_new=6, stop_tokens=(stop,)))])
+    assert res.finish_reason == "stop"
+    assert res.tokens == expect and len(res.tokens) < 6
+
+
+def test_scheduler_equivalence_continuous_vs_sequential():
+    """Property: continuous-batched greedy outputs ≡ one-request-at-a-time
+    generate, across mixed prompt lengths (grouped multi-row prefill) and
+    slot recycling (6 requests through a 3-slot pool)."""
+    cfg = configs.get_reduced("granite-20b")
+    params = init_lm_params(jax.random.PRNGKey(6), cfg)
+    prompts = [[1 + i, 2, 3] if i % 2 == 0 else [4, 1 + i, 2, 5]
+               for i in range(6)]
+    sched = Scheduler(LMBackend(cfg, params, slots=3, max_len=32))
+    results = sched.run([ServeRequest(rid=i, prompt=p,
+                                      sampling=SamplingParams(max_new=4))
+                         for i, p in enumerate(prompts)])
+    assert len(results) == 6
+    by_rid = {r.rid: r for r in results}
+    for i, p in enumerate(prompts):
+        want = _greedy_via_forward(
+            cfg, params, jnp.asarray(p, jnp.int32)[None], 4, "float")[0]
+        assert by_rid[i].tokens == [int(t) for t in want], (i, by_rid[i])
+        assert by_rid[i].finish_reason == "length"
+    s = sched.metrics.summary()
+    assert s["requests_completed"] == 6 and s["tokens"] == 24
+    assert 0 < s["batch_occupancy"] <= 1 and s["tick_p95_ms"] >= 0
+
+
+def test_scheduler_per_request_temperature():
+    """Greedy and sampled requests coexist in one pool; the greedy row must
+    stay bit-identical to its standalone generation."""
+    cfg = configs.get_reduced("granite-20b")
+    params = init_lm_params(jax.random.PRNGKey(6), cfg)
+    sched = Scheduler(LMBackend(cfg, params, slots=2, max_len=32))
+    reqs = [ServeRequest(rid=0, prompt=[1, 2, 3],
+                         sampling=SamplingParams(max_new=5)),
+            ServeRequest(rid=1, prompt=[3, 2, 1],
+                         sampling=SamplingParams(max_new=5,
+                                                 temperature=1.0))]
+    by_rid = {r.rid: r for r in sched.run(reqs)}
+    want = _greedy_via_forward(cfg, params,
+                               jnp.asarray([[1, 2, 3]], jnp.int32), 5,
+                               "float")[0]
+    assert by_rid[0].tokens == [int(t) for t in want]
+    assert len(by_rid[1].tokens) == 5
+
+
 def test_continuous_batching_engine():
     cfg = configs.get_reduced("granite-20b")
     params = init_lm_params(jax.random.PRNGKey(6), cfg)
     reqs = [Request(rid=i, prompt=[1 + i, 2 + i, 3], max_new=4)
             for i in range(5)]                       # 5 reqs > 3 slots
-    eng = ServeEngine(cfg, params, slots=3, max_len=32)
+    with pytest.warns(DeprecationWarning):
+        eng = ServeEngine(cfg, params, slots=3, max_len=32)
     done = eng.run(list(reqs))
     assert all(r.done and len(r.out) == 4 for r in done)
     # each request's output must equal its standalone greedy generation

@@ -1,0 +1,105 @@
+"""Detection serving (serve v2): batched W1A8 YOLO requests through the same
+ServeRequest/Scheduler API as LM decode, verified against the float
+reference within core.verify tolerances (paper §6.3 discipline)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import verify
+from repro.models import detection, yolo
+from repro.serve import DetectionBackend, Scheduler, ServeRequest
+
+
+@pytest.fixture(scope="module")
+def served():
+    rng = np.random.default_rng(0)
+    imgs_u8 = rng.integers(0, 256, (3, 320, 320, 3), np.uint8)
+    params, art = yolo.build_detector(
+        jax.random.PRNGKey(42), jnp.asarray(imgs_u8[:1], jnp.float32) / 256.0)
+    sched = Scheduler(DetectionBackend(art, slots=2))
+    results = sched.run([ServeRequest(rid=i, image=imgs_u8[i])
+                         for i in range(3)])         # 3 reqs > 2 slots
+    return params, imgs_u8, sched, {r.rid: r for r in results}
+
+
+def test_detection_serves_through_scheduler(served):
+    _, _, sched, by_rid = served
+    assert sorted(by_rid) == [0, 1, 2]
+    assert all(r.finish_reason == "ok" for r in by_rid.values())
+    s = sched.metrics.summary()
+    assert s["images"] == 3 and s["requests_completed"] == 3
+    assert s["ticks"] == 2                           # B=2 tick then B=1 tick
+    assert s["img_per_s"] > 0 and s["tick_p95_ms"] > 0
+
+
+def test_served_raw_head_matches_float_reference(served):
+    """Raw head of the served (packed Pallas) path vs float oracle — the
+    same Table-6 tolerances as the offline kernel-alignment test."""
+    params, imgs_u8, _, by_rid = served
+    ref = np.asarray(yolo.yolo_forward_float(
+        params, jnp.asarray(imgs_u8, jnp.float32) / 256.0), np.float64)
+    got = np.stack([by_rid[i].detections["raw"] for i in range(3)])
+    rep = verify.compare("served_raw", got, ref, lsb=0.02)
+    assert rep.max_abs < 0.02 and rep.within_1lsb == 1.0
+
+
+def test_served_decoded_detections_match_float_reference(served):
+    """Pre-NMS decoded detections (boxes + per-class scores, element-
+    aligned) of the served path vs the float reference, core.verify
+    statistics."""
+    params, imgs_u8, _, by_rid = served
+    ref = detection.decode_head(yolo.yolo_forward_float(
+        params, jnp.asarray(imgs_u8, jnp.float32) / 256.0))
+    got = detection.decode_head(jnp.stack(
+        [by_rid[i].detections["raw"] for i in range(3)]))
+    for leaf in ("boxes", "scores"):
+        rep = verify.compare(f"served_{leaf}", np.asarray(got[leaf]),
+                             np.asarray(ref[leaf]), lsb=1e-3)
+        assert rep.max_abs < 1e-3 and rep.within_1lsb == 1.0, rep.row()
+
+
+def test_nms_detections_stable_at_verified_tolerance():
+    """NMS'd detections match between a head and a copy perturbed by 3×
+    the raw-head tolerance the serving path is verified to (max_abs ≈ 3e-4
+    in test_served_raw_head_matches_float_reference). Untrained heads tie
+    all 300 scores at σ(0)² ≈ 0.25 (argmax of ties is ill-conditioned), so
+    the equivalence is stated on a score-separated, trained-regime head:
+    clear peaks in, identical detection sets out."""
+    key = jax.random.PRNGKey(7)
+    raw = jnp.full((1, 10, 10, 75), 0.0)
+    r = raw.reshape(1, 10, 10, 3, 25)
+    r = r.at[..., 4].set(-6.0)                       # background objectness
+    peaks = [(1, 2, 0, 3), (4, 7, 1, 11), (8, 3, 2, 0),
+             (5, 5, 0, 19), (9, 9, 1, 7), (2, 8, 2, 11)]
+    for gy, gx, a, cls in peaks:
+        r = r.at[0, gy, gx, a, 4].set(5.0)           # confident object
+        r = r.at[0, gy, gx, a, 5:].set(-5.0)
+        r = r.at[0, gy, gx, a, 5 + cls].set(4.0)     # separated class
+        r = r.at[0, gy, gx, a, :4].set(
+            jax.random.normal(jax.random.fold_in(key, gy * 10 + gx), (4,)))
+    raw = r.reshape(1, 10, 10, 75)
+    noise = 1e-3 * jax.random.uniform(key, raw.shape, minval=-1, maxval=1)
+    rb, rs, rc = detection.postprocess(raw)
+    pb, ps, pc = detection.postprocess(raw + noise)
+    ref = detection.detections_to_list(rb[0], rs[0], rc[0])
+    got = detection.detections_to_list(pb[0], ps[0], pc[0])
+    assert len(ref) == len(got) == len(peaks)
+    unmatched = list(ref)
+    for d in got:
+        for j, e in enumerate(unmatched):
+            iou = float(detection.iou_cxcywh(
+                jnp.asarray(d["box_cxcywh"]), jnp.asarray(e["box_cxcywh"])))
+            if (d["class_id"] == e["class_id"] and iou > 0.95
+                    and abs(d["score"] - e["score"]) < 0.01):
+                unmatched.pop(j)
+                break
+        else:
+            raise AssertionError(f"unmatched detection {d}")
+
+
+def test_detections_to_list_drops_empty_slots():
+    boxes = jnp.asarray([[0.5, 0.5, 0.2, 0.2], [0.0, 0.0, 0.0, 0.0]])
+    dets = detection.detections_to_list(boxes, jnp.asarray([0.9, 0.0]),
+                                        jnp.asarray([3, -1]))
+    assert len(dets) == 1 and dets[0]["class_id"] == 3
