@@ -1,4 +1,13 @@
-"""Jit'd public wrapper for the streaming W1A8 3×3 conv kernel."""
+"""Jit'd public wrappers for the streaming W1A8 3×3 conv kernels.
+
+`w1a8_conv3x3` — conv + fused Mul_prev/Div/bias/round/clip epilogue.
+`w1a8_conv3x3_pool` — the same conv with the 2×2 MaxPool fused into the
+epilogue (the paper's §5.2 Post+MaxPool stage chain): the conv output never
+round-trips through HBM, which is what lets the streaming serving path
+(`serve.backends.DetectionBackend(fuse_pool=True)`) emit pooled uint8 rows
+directly. Bit-exact vs conv-then-reduce_window (same per-row dot shapes,
+same rounding, max commutes with the uint8 cast).
+"""
 from __future__ import annotations
 
 import functools
@@ -52,3 +61,26 @@ def w1a8_conv3x3(a_u8: jax.Array, w_packed: jax.Array, mul_prev: jax.Array,
         a_pad, wp, mul9, div_post.astype(jnp.float32).reshape(1, cout),
         bias.astype(jnp.float32).reshape(1, cout),
         out_step=out_step, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("cin", "out_step", "interpret",
+                                             "use_kernel"))
+def w1a8_conv3x3_pool(a_u8: jax.Array, w_packed: jax.Array,
+                      mul_prev: jax.Array, div_post: jax.Array,
+                      bias: jax.Array, *, cin: int, out_step: float = 1.0,
+                      interpret: bool = True,
+                      use_kernel: bool = True) -> jax.Array:
+    """Streaming 3×3 SAME conv + requant + 2×2 MaxPool in one kernel.
+
+    Same contract as `w1a8_conv3x3` with a quantizing epilogue, but H and W
+    must be even and the output is the pooled (B, H/2, W/2, Cout) uint8
+    code plane (`fused_pool.w1a8_conv3x3_pool2`).
+    """
+    if not use_kernel:
+        out = _ref.w1a8_conv3x3_ref(a_u8, w_packed, cin, mul_prev, div_post,
+                                    bias, jnp.float32(out_step))
+        return jax.lax.reduce_window(out, jnp.uint8(0), jax.lax.max,
+                                     (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    from repro.kernels.w1a8_conv.fused_pool import w1a8_conv3x3_pool2
+    return w1a8_conv3x3_pool2(a_u8, w_packed, mul_prev, div_post, bias,
+                              cin=cin, out_step=out_step, interpret=interpret)

@@ -1,15 +1,24 @@
 """Serving launcher: ``python -m repro.launch.serve --workload {lm,detect}``.
 
-Drives the serve-v2 Scheduler over a synthetic request stream against one of
+Drives the serve-v3 Scheduler over a synthetic request stream against one of
 the two backends:
 
   lm      — continuous-batched decode of an LM arch (--packed deploys 1-bit
-            W1A8 weights, the paper's deployed form, and decodes with them);
+            W1A8 weights, the paper's deployed form, and decodes with them).
+            Runs the host-checked termination path AND the device-side
+            done-mask path over the same request stream and records both —
+            the done-mask run is the headline record, the host-checked run
+            lands under ``baseline_host_check`` (token sequences asserted
+            identical).
   detect  — the paper's deployed artifact: batched 320×320 image requests
             through the packed-W1A8 YOLO Pallas path + NMS, with a
-            core.verify alignment check against the float reference.
+            core.verify alignment check against the float reference. Runs
+            single-shot AND double-buffered (overlap) over the same images
+            and records both; ``--burst 4x`` submits the whole stream as
+            one burst (4× the slot width) through the bounded wait queue
+            and asserts zero drops and ≤ 1 host sync per tick.
 
-Writes/merges throughput + latency + occupancy numbers into
+Writes/merges throughput + latency + occupancy + host-sync numbers into
 ``benchmarks/results/BENCH_serve.json`` (methodology: EXPERIMENTS.md §Serve).
 """
 from __future__ import annotations
@@ -35,6 +44,14 @@ def _write_bench(path: str, workload: str, record: dict) -> None:
     print(f"[bench] wrote {path} [{workload}]")
 
 
+def _parse_burst(burst: str, slots: int) -> int:
+    """'4x' → 4·slots requests submitted as one burst; '0' → streaming."""
+    if not burst:
+        return 0
+    mult = burst[:-1] if burst.endswith(("x", "X")) else burst
+    return int(mult) * slots
+
+
 def run_lm(args) -> dict:
     import jax
     from repro import configs
@@ -54,23 +71,51 @@ def run_lm(args) -> dict:
               f"{acct['ratio']:.1f}x smaller)")
         mode = "w1a8_eval"
 
-    backend = LMBackend(cfg, params, slots=args.slots, max_len=args.max_len,
-                        mode=mode, seed=args.seed)
-    sched = Scheduler(backend)
     sp = SamplingParams(max_new=args.max_new, temperature=args.temperature,
                         stop_tokens=tuple(args.stop_token))
-    reqs = [ServeRequest(rid=i, prompt=[2 + i, 11, 7 + i % 3], sampling=sp)
-            for i in range(args.requests)]
-    results = sched.run(reqs)
-    summary = sched.metrics.summary()
-    print(f"served {len(results)} requests, {summary['tokens']} tokens in "
+
+    def serve(done_mask: bool):
+        backend = LMBackend(cfg, params, slots=args.slots,
+                            max_len=args.max_len, mode=mode, seed=args.seed,
+                            done_mask=done_mask)
+
+        def stream():
+            return [ServeRequest(rid=i, prompt=[2 + i, 11, 7 + i % 3],
+                                 sampling=sp) for i in range(args.requests)]
+
+        # warm pass on a throwaway scheduler compiles this backend's jitted
+        # step (and warms the eager prefill ops) so both modes' measured
+        # numbers are steady-state — same discipline as detect's warmup().
+        # Both modes consume the PRNG stream identically in the warm pass,
+        # so the measured token sequences stay comparable across modes.
+        Scheduler(backend).run(stream())
+        sched = Scheduler(backend)
+        results = sched.run(stream())
+        return results, sched.metrics.summary()
+
+    host_results, host_summary = serve(done_mask=False)
+    dm_results, summary = serve(done_mask=True)
+    host_toks = {r.rid: r.tokens for r in host_results}
+    dm_toks = {r.rid: r.tokens for r in dm_results}
+    assert dm_toks == host_toks, "done-mask decode diverged from host check"
+    print(f"served {len(dm_results)} requests, {summary['tokens']} tokens in "
           f"{summary['wall_s']:.2f}s ({summary['tok_per_s']:.1f} tok/s, "
           f"p50 tick {summary['tick_p50_ms']:.1f} ms, "
-          f"occupancy {summary['batch_occupancy']:.2f})")
-    for r in results[:3]:
+          f"occupancy {summary['batch_occupancy']:.2f}); "
+          f"per-tick sync {summary['host_sync_bytes_per_tick']:.0f} B "
+          f"done-mask vs {host_summary['host_sync_bytes_per_tick']:.0f} B "
+          f"token-row host-checked")
+    for r in dm_results[:3]:
         print(f"  req {r.rid} [{r.finish_reason}]: {r.tokens[:10]}...")
     return {"arch": args.arch, "reduced": args.reduced, "packed": args.packed,
-            "slots": args.slots, "max_new": args.max_new, **summary}
+            "slots": args.slots, "max_new": args.max_new,
+            "termination": "device_done_mask",
+            "sync_wire": "per-slot bool bitmask/tick + bulk tokens at finish",
+            **summary,
+            "baseline_host_check": {
+                "termination": "host_token_check",
+                "sync_wire": "token row/tick",
+                **host_summary}}
 
 
 def run_detect(args) -> dict:
@@ -82,6 +127,9 @@ def run_detect(args) -> dict:
     from repro.serve import DetectionBackend, Scheduler, ServeRequest
 
     n_req = 2 if args.reduced else args.requests
+    burst = _parse_burst(args.burst, args.slots)
+    if burst:
+        n_req = max(n_req, burst)
     rng = np.random.default_rng(args.seed)
     imgs_u8 = rng.integers(0, 256, (n_req, yolo.INPUT_SIZE, yolo.INPUT_SIZE,
                                     3), np.uint8)
@@ -89,29 +137,55 @@ def run_detect(args) -> dict:
         jax.random.PRNGKey(args.seed),
         jnp.asarray(imgs_u8[:1], jnp.float32) / 256.0)
 
-    backend = DetectionBackend(art, slots=args.slots)
-    sched = Scheduler(backend)
-    reqs = [ServeRequest(rid=i, image=imgs_u8[i]) for i in range(n_req)]
-    results = sched.run(reqs)
-    summary = sched.metrics.summary()
+    def serve(overlap: bool):
+        backend = DetectionBackend(art, slots=args.slots, overlap=overlap,
+                                   fuse_pool=args.fuse_pool)
+        backend.warmup()                  # compile outside the timed ticks
+        sched = Scheduler(backend, max_queue=max(n_req, 1))
+        results = sched.run([ServeRequest(rid=i, image=imgs_u8[i])
+                             for i in range(n_req)])
+        return results, sched.metrics.summary()
+
+    ss_results, ss_summary = serve(overlap=False)
+    ov_results, summary = serve(overlap=True)
+
+    # overlap correctness: double-buffered serving is bit-exact vs
+    # single-shot (same fixed-width executable, same batch composition)
+    ss_raw = {r.rid: r.detections["raw"] for r in ss_results}
+    for r in ov_results:
+        assert np.array_equal(r.detections["raw"], ss_raw[r.rid]), \
+            f"overlap raw head diverged for rid {r.rid}"
+    if burst:
+        assert summary["requests_dropped"] == 0, summary
+        assert summary["requests_completed"] == n_req, summary
+        assert summary["host_syncs_per_tick"] <= 1.0 + 1e-9, \
+            f"host syncs/tick {summary['host_syncs_per_tick']} > 1"
+        print(f"[burst] {n_req} requests ({args.burst}) drained: 0 dropped, "
+              f"{summary['host_syncs_per_tick']:.2f} host syncs/tick, "
+              f"queue depth max {summary['queue_depth_max']}")
 
     # §6.3 alignment of the served (packed/Pallas) path vs float reference
     ref = np.asarray(yolo.yolo_forward_float(
         params, jnp.asarray(imgs_u8, jnp.float32) / 256.0), np.float64)
     served_raw = np.stack([r.detections["raw"] for r in
-                           sorted(results, key=lambda r: r.rid)])
+                           sorted(ov_results, key=lambda r: r.rid)])
     rep = verify.compare("serve_detect_raw", served_raw, ref, lsb=0.02)
     print(rep.row())
     n_boxes = [len(detection.detections_to_list(
         r.detections["boxes"], r.detections["scores"],
-        r.detections["classes"])) for r in results]
-    print(f"served {len(results)} images in {summary['wall_s']:.2f}s "
-          f"({summary['img_per_s']:.2f} img/s, p50 tick "
+        r.detections["classes"])) for r in ov_results]
+    print(f"served {len(ov_results)} images in {summary['wall_s']:.2f}s "
+          f"({summary['img_per_s']:.2f} img/s overlap vs "
+          f"{ss_summary['img_per_s']:.2f} img/s single-shot, p50 tick "
           f"{summary['tick_p50_ms']:.1f} ms); detections/img {n_boxes}")
     return {"reduced": args.reduced, "slots": args.slots,
+            "burst": args.burst or None, "fuse_pool": args.fuse_pool,
+            "pipelining": "double_buffered",
             "alignment": {"max_abs": rep.max_abs, "mean_abs": rep.mean_abs,
                           "within_1lsb": rep.within_1lsb},
-            **summary}
+            **summary,
+            "baseline_single_shot": {"pipelining": "single_shot",
+                                     **ss_summary}}
 
 
 def main():
@@ -128,6 +202,11 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--stop-token", type=int, action="append", default=[],
                     help="token id ending a request early (repeatable)")
+    ap.add_argument("--burst", default="",
+                    help="submit the whole stream as one burst, e.g. 4x = "
+                         "4×slots requests (detect)")
+    ap.add_argument("--fuse-pool", action="store_true",
+                    help="fused conv+maxpool Pallas kernel for pool layers")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=DEFAULT_OUT)
     args = ap.parse_args()

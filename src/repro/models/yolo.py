@@ -380,11 +380,16 @@ def build_detector(key: jax.Array, calib_images: jax.Array) -> tuple:
 
 
 def yolo_forward_kernel(art: dict, images: jax.Array, *,
-                        interpret: bool = True) -> jax.Array:
+                        interpret: bool = True,
+                        fuse_pool: bool = False) -> jax.Array:
     """Pallas streaming path. images (B,320,320,3) in [0,1] → (B,10,10,75) f32.
 
     Inter-layer tensors are uint8 codes (requantized in each kernel's
     epilogue) — HBM activation traffic is 1 byte/elem, the streaming analogue.
+    ``fuse_pool`` routes pooled W1A8 layers (conv2–4, conv7) through the
+    fused conv+requant+MaxPool kernel (§5.2 Post+MaxPool stage chain): the
+    pre-pool activation plane never exists in HBM. Bit-exact vs the unfused
+    path.
     """
     layers = art["layers"]
     # conv1 (std, fixed-point-rounded weights) in f32, then quantize to codes.
@@ -404,6 +409,12 @@ def yolo_forward_kernel(art: dict, images: jax.Array, *,
         s_next = entry["step_out"]                     # (cout,) vector
         div_eff = entry["alpha"] / s_next
         b_eff = entry["b"] / s_next
+        if spec.ksize == 3 and spec.pool and fuse_pool:
+            codes = conv_ops.w1a8_conv3x3_pool(
+                codes, entry["w_packed"], mul_prev, div_eff, b_eff,
+                cin=spec.cin, out_step=1.0, interpret=interpret)
+            cur_steps = s_next
+            continue
         if spec.ksize == 3:
             out = conv_ops.w1a8_conv3x3(
                 codes, entry["w_packed"], mul_prev, div_eff, b_eff,

@@ -1,21 +1,39 @@
-"""serve v2 public API — one backend-agnostic request lifecycle.
+"""serve v3 public API — one backend-agnostic, streaming request lifecycle.
 
 A request enters as a `ServeRequest` (token prompt for LM decode, image for
-W1A8 detection), is assigned a pool slot by the `Scheduler`, flows through a
-`Backend` (admit / step / harvest), and leaves as a `ServeResult`. The
-scheduler owns queueing, stop conditions and metrics; backends own only the
-model computation — so LM decode and YOLO detection serve through the same
-loop (DESIGN.md §10).
+W1A8 detection), waits in the scheduler's bounded queue, is assigned a pool
+slot, flows through a `Backend` (admit / step / harvest), and leaves as a
+`ServeResult`. The scheduler owns queueing, deadlines, stop conditions and
+metrics; backends own only the model computation — so LM decode and YOLO
+detection serve through the same loop (DESIGN.md §10–§11).
 
 Backend protocol (one decode/inference tick per `step`):
 
     admit(assignments)   stage [(slot, request), ...] into the pool —
                          batched multi-row prefill for LMs, image staging
                          for detection. May already produce emissions.
-    step()               advance every active slot by one fused tick.
+    step()               advance every active slot by one fused tick. A
+                         streaming backend may *dispatch* tick t's compute
+                         here and only surface its results at tick t+1
+                         (double buffering — harvest order still per slot).
     harvest()            drain {slot: [Emission, ...]} produced since the
                          last harvest, in emission order.
     release(slot)        scheduler returns a finished slot to the pool.
+
+Optional backend attributes the scheduler honours:
+
+    admit_width          max requests admitted per tick (paged admission;
+                         default: capacity). A double-buffered backend
+                         exposes capacity = 2·width so one batch can be in
+                         flight while the next is staged.
+    host_syncs           running count of blocking device→host transfers
+                         on the per-tick step/harvest path (one batched
+                         transfer event = 1). The scheduler snapshots the
+                         delta into EngineMetrics each tick.
+    completion_syncs     transfers that only happen when a request
+                         finishes (e.g. the bulk token fetch of the
+                         done-mask decode path) — boundary cost, kept out
+                         of the steady-state per-tick number.
 """
 from __future__ import annotations
 
@@ -39,24 +57,38 @@ class ServeRequest:
     prompt: Optional[Sequence[int]] = None      # LM workloads
     image: Optional[Any] = None                 # detection workloads
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    # Admission deadline, in scheduler ticks from submission: the request
+    # must reach a pool slot within this many ticks or it expires in the
+    # wait queue (finish_reason "expired"). None → wait forever (FIFO).
+    deadline_ticks: Optional[int] = None
 
 
 @dataclasses.dataclass
 class ServeResult:
     rid: int
-    finish_reason: str                          # "length" | "stop" | "ok"
+    finish_reason: str              # "length"|"stop"|"ok"|"expired"|"rejected"
     tokens: List[int] = dataclasses.field(default_factory=list)
     detections: Optional[dict] = None           # boxes / scores / classes / raw
     n_ticks: int = 0                            # scheduler ticks slot was held
+    wait_ticks: int = 0                         # ticks spent in the wait queue
+    deadline_met: Optional[bool] = None         # None when no deadline was set
 
 
 @dataclasses.dataclass
 class Emission:
-    """One unit of backend output for a slot: a token (LM) or a final
-    payload (detection). `final=True` completes the request regardless of
-    its sampling params."""
+    """One unit of backend output for a slot.
+
+    Host-side-checked LM decode emits one `token` per tick; detection emits
+    a final `payload`. A device-side-done backend instead emits nothing per
+    tick and, when its done-mask lights up, one **bulk** emission carrying
+    the whole `tokens` sequence plus the backend-decided `finish` reason —
+    the async emission state of the streaming path (DESIGN.md §11).
+    `final=True` completes the request regardless of its sampling params.
+    """
     token: Optional[int] = None
     payload: Optional[dict] = None
+    tokens: Optional[Tuple[int, ...]] = None    # bulk (device-side done-mask)
+    finish: Optional[str] = None                # backend-decided reason
     final: bool = False
 
 
@@ -78,24 +110,33 @@ class Backend(Protocol):
 
 @dataclasses.dataclass
 class EngineMetrics:
-    """Throughput / latency / occupancy accounting, recorded per tick by the
-    scheduler and summarised into BENCH_serve.json by launch/serve."""
+    """Throughput / latency / occupancy / host-sync accounting, recorded per
+    tick by the scheduler and summarised into BENCH_serve.json by
+    launch/serve."""
     capacity: int = 0
     ticks: int = 0
     tokens: int = 0
     images: int = 0
     submitted: int = 0
     completed: int = 0
+    rejected: int = 0                 # bounded wait queue was full at submit
+    expired: int = 0                  # admission deadline passed while queued
+    host_syncs: int = 0               # per-tick step/harvest-path transfers
+    host_sync_bytes: int = 0          # bytes over those transfers
+    completion_syncs: int = 0         # request-completion transfers
     tick_s: List[float] = dataclasses.field(default_factory=list)
     occupancy: List[float] = dataclasses.field(default_factory=list)
+    queue_depth: List[int] = dataclasses.field(default_factory=list)
 
     def record_tick(self, dt: float, active: int, *,
-                    tokens: int = 0, images: int = 0) -> None:
+                    tokens: int = 0, images: int = 0,
+                    queued: int = 0) -> None:
         self.ticks += 1
         self.tokens += tokens
         self.images += images
         self.tick_s.append(float(dt))
         self.occupancy.append(active / max(self.capacity, 1))
+        self.queue_depth.append(int(queued))
 
     def summary(self) -> dict:
         wall = float(sum(self.tick_s))
@@ -104,6 +145,9 @@ class EngineMetrics:
             "ticks": self.ticks,
             "wall_s": wall,
             "requests_completed": self.completed,
+            "requests_rejected": self.rejected,
+            "requests_expired": self.expired,
+            "requests_dropped": self.rejected + self.expired,
             "tokens": self.tokens,
             "images": self.images,
             "tok_per_s": self.tokens / wall if wall > 0 else 0.0,
@@ -112,4 +156,14 @@ class EngineMetrics:
             "tick_p95_ms": 1e3 * float(np.quantile(lat, 0.95)),
             "batch_occupancy": (float(np.mean(self.occupancy))
                                 if self.occupancy else 0.0),
+            "host_syncs": self.host_syncs,
+            "completion_syncs": self.completion_syncs,
+            "host_syncs_per_tick": (self.host_syncs / self.ticks
+                                    if self.ticks else 0.0),
+            "host_sync_bytes_per_tick": (self.host_sync_bytes / self.ticks
+                                         if self.ticks else 0.0),
+            "queue_depth_max": (max(self.queue_depth)
+                                if self.queue_depth else 0),
+            "queue_depth_mean": (float(np.mean(self.queue_depth))
+                                 if self.queue_depth else 0.0),
         }

@@ -3,20 +3,32 @@
 `LMBackend` — autoregressive decode over the stage-stacked LM params: one
 fused `decode_step` per tick for every pool row, batched multi-row prefill
 at admission (requests arriving together prefill as one batch per prompt
-length, then scatter into the pool via `cache.merge_rows` — no per-leaf
-shape-matched splice), per-row temperature sampling.
+length, then scatter into the pool via `cache.merge_rows`), per-row
+temperature sampling. Two termination paths:
+
+  * host-checked (default): the sampled token row syncs to the host every
+    tick and the scheduler applies stop-token / max_new per emission;
+  * ``done_mask=True``: the fused step (`engine.decode_step_donemask`)
+    samples, appends to a device-side token buffer and folds the
+    stop-token + max_new tests into a per-slot ``done`` bitmask — the only
+    per-tick device→host read. Token sequences sync once, in bulk, when a
+    slot finishes. Token-for-token equivalent to the host path (same
+    sampler expressions, same PRNG-key discipline).
 
 `DetectionBackend` — the paper's deployed workload: batched 320×320 image
-requests through the packed-W1A8 Pallas conv path
-(`models.yolo.yolo_forward_kernel`), detection-head decode + NMS
-(`models.detection.postprocess`). Every admitted image completes in the
-tick after admission (single-shot inference), so slots recycle every tick
-under load.
+requests through the packed-W1A8 Pallas conv path + head decode + NMS,
+bundled into ONE fixed-width jitted dispatch. With ``overlap=True`` the
+backend double-buffers like the FPGA pipeline overlaps line-buffered conv
+with ingest: tick t's batch is *dispatched* asynchronously and harvested at
+tick t+1, so next-tick admission (host-side image staging, slot assignment)
+and even the next dispatch overlap device compute. The slot pool doubles
+(capacity = 2·width, admit_width = width) so a full batch can stage while
+another is in flight — steady state stays one batch per tick.
 """
 from __future__ import annotations
 
 import collections
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,25 +37,49 @@ import numpy as np
 from repro.models.layers import ModelConfig
 from repro.serve import cache as cache_mod
 from repro.serve.api import Emission, ServeRequest
-from repro.serve.engine import decode_step, prefill
+from repro.serve.engine import decode_step, decode_step_donemask, prefill
 
 
 class LMBackend:
     """Slot-pool LM decode backend (capacity = pool batch B)."""
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 max_len: int = 256, mode: str = "float", seed: int = 17):
+                 max_len: int = 256, mode: str = "float", seed: int = 17,
+                 done_mask: bool = False, max_stop_tokens: int = 4):
         self.cfg, self.params = cfg, params
         self.capacity, self.max_len, self.mode = slots, max_len, mode
+        self.done_mask = done_mask
         self.cache = cache_mod.init_cache(cfg, slots, max_len)
         self.last_tok = jnp.zeros((slots,), jnp.int32)
         self.temp = np.zeros((slots,), np.float32)
         self._active = np.zeros((slots,), bool)
         self._emissions: Dict[int, List[Emission]] = collections.defaultdict(
             list)
-        self._step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t,
-                                                         mode=mode))
         self._key = jax.random.PRNGKey(seed)
+        self.host_syncs = 0          # per-tick step/harvest-path transfers
+        self.host_sync_bytes = 0     # bytes over those transfers
+        self.completion_syncs = 0    # bulk token fetches (done-mask path)
+        if done_mask:
+            self.max_stop_tokens = max_stop_tokens
+            # device-side decode state (DESIGN.md §11 wire format)
+            self.tok_buf = jnp.zeros((slots, max_len), jnp.int32)
+            self.n_gen = jnp.zeros((slots,), jnp.int32)
+            self.done = jnp.ones((slots,), bool)       # vacant rows are done
+            # host mirrors — derivable from the admission record plus the
+            # done-mask reads, so tracking them costs no extra transfers
+            self._n_host = np.zeros((slots,), np.int64)
+            self._done_host = np.ones((slots,), bool)
+            self._stops_host: Dict[int, Tuple[int, ...]] = {}
+            self._max_new_host = np.zeros((slots,), np.int64)
+            self._stops_pad = np.full((slots, max_stop_tokens), -1, np.int32)
+            self._step_done = jax.jit(
+                lambda p, c, lt, tb, ng, dn, st, mn, t, k, use_key:
+                decode_step_donemask(cfg, p, c, lt, tb, ng, dn, st, mn, t, k,
+                                     mode=mode, use_key=use_key),
+                static_argnums=(10,))
+        else:
+            self._step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t,
+                                                             mode=mode))
 
     # -- admission: batched multi-row prefill --------------------------------
     def admit(self, assignments: Sequence[Tuple[int, ServeRequest]]) -> None:
@@ -60,32 +96,106 @@ class LMBackend:
             self.cache = cache_mod.merge_rows(self.cache, cache1, rows)
             first = self._sample(logits, np.asarray(
                 [r.sampling.temperature for _, r in group], np.float32))
-            for i, slot in enumerate(rows):
+            for i, (slot, req) in enumerate(group):
                 tok = int(first[i])
                 self.last_tok = self.last_tok.at[slot].set(tok)
                 self._active[slot] = True
-                self._emissions[slot].append(Emission(token=tok))
+                if self.done_mask:
+                    self._admit_done_mask(slot, req, tok)
+                else:
+                    self._emissions[slot].append(Emission(token=tok))
+
+    def _admit_done_mask(self, slot: int, req: ServeRequest,
+                         tok: int) -> None:
+        """Seed the device-side decode state for one admitted row. The
+        prefill token is sampled host-side (shared path with host-checked
+        mode), so its stop test runs here and folds into the initial done
+        bit — a stop token in position 1 finishes the request this tick."""
+        sp = req.sampling
+        stops = tuple(sp.stop_tokens)
+        if len(stops) > self.max_stop_tokens:
+            raise ValueError(f"request {req.rid}: {len(stops)} stop tokens "
+                             f"> backend cap {self.max_stop_tokens}")
+        if sp.max_new > self.max_len:
+            raise ValueError(f"request {req.rid}: max_new {sp.max_new} "
+                             f"exceeds the device token buffer "
+                             f"(max_len={self.max_len})")
+        done0 = (tok in stops) or (1 >= sp.max_new)
+        self.tok_buf = self.tok_buf.at[slot, 0].set(tok)
+        self.n_gen = self.n_gen.at[slot].set(1)
+        self.done = self.done.at[slot].set(done0)
+        self._n_host[slot] = 1
+        self._done_host[slot] = done0
+        self._stops_host[slot] = stops
+        self._max_new_host[slot] = sp.max_new
+        self._stops_pad[slot] = -1
+        self._stops_pad[slot, :len(stops)] = stops
 
     # -- one fused decode tick -----------------------------------------------
     def step(self) -> None:
         if not self._active.any():
             return
+        if self.done_mask:
+            self._step_done_mask()
+            return
         logits, self.cache = self._step(self.params, self.cache,
                                         self.last_tok[:, None])
-        nxt = self._sample(logits, self.temp)
+        nxt = self._sample(logits, self.temp)          # token-row host sync
+        self.host_syncs += 1
+        self.host_sync_bytes += 4 * self.capacity      # (B,) int32 tokens
         self.last_tok = jnp.asarray(nxt, jnp.int32)
         for slot in np.flatnonzero(self._active):
             self._emissions[int(slot)].append(Emission(token=int(nxt[slot])))
 
+    def _step_done_mask(self) -> None:
+        use_key = bool((self.temp > 0).any())          # same rule as _sample
+        if use_key:
+            self._key, k = jax.random.split(self._key)
+        else:
+            k = self._key                              # traced but unused
+        (self.cache, self.last_tok, self.tok_buf, self.n_gen,
+         self.done) = self._step_done(
+            self.params, self.cache, self.last_tok, self.tok_buf, self.n_gen,
+            self.done, jnp.asarray(self._stops_pad),
+            jnp.asarray(self._max_new_host, jnp.int32),
+            jnp.asarray(self.temp), k, use_key)
+        # rows live at dispatch grew by one token (mirrors device n_gen)
+        self._n_host += (self._active & ~self._done_host)
+
     def harvest(self) -> Dict[int, List[Emission]]:
-        out = dict(self._emissions)
-        self._emissions = collections.defaultdict(list)
+        if not self.done_mask:
+            out = dict(self._emissions)
+            self._emissions = collections.defaultdict(list)
+            return out
+        out: Dict[int, List[Emission]] = {}
+        if not self._active.any():
+            return out
+        done_np = np.asarray(self.done)          # THE per-tick bitmask read
+        self.host_syncs += 1
+        self.host_sync_bytes += self.capacity    # (B,) bool bitmask
+        newly = done_np & self._active
+        self._done_host = done_np.copy()
+        if newly.any():
+            rows = np.flatnonzero(newly)
+            toks = np.asarray(self.tok_buf[jnp.asarray(rows)])  # one gather
+            self.completion_syncs += 1
+            for i, slot in enumerate(rows):
+                slot = int(slot)
+                n = int(self._n_host[slot])
+                seq = tuple(int(t) for t in toks[i, :n])
+                reason = ("stop" if seq and seq[-1]
+                          in self._stops_host.get(slot, ()) else "length")
+                out[slot] = [Emission(tokens=seq, finish=reason, final=True)]
         return out
 
     def release(self, slot: int) -> None:
         self._active[slot] = False
         self.temp[slot] = 0.0        # stale temp would force sampling forever
         self._emissions.pop(slot, None)
+        if self.done_mask:
+            self.done = self.done.at[slot].set(True)
+            self._done_host[slot] = True
+            self._stops_host.pop(slot, None)
 
     # per-row temperature: greedy rows take argmax, sampled rows categorical
     def _sample(self, logits, temp) -> np.ndarray:
@@ -101,44 +211,92 @@ class LMBackend:
 
 
 class DetectionBackend:
-    """Packed-W1A8 YOLO detection backend (single-shot per request).
+    """Packed-W1A8 YOLO detection backend (one image per request).
 
     ``art`` is a `models.yolo.deploy_yolo_kernel` artifact; images are
     (320, 320, 3) float in [0, 1] or uint8 raw pixels (divided by 256, the
     Q0.8 convention). Emissions carry NMS'd detections plus the raw head
     for verification against the float reference (core.verify).
+
+    The forward (Pallas convs → head decode → NMS) is ONE jitted dispatch
+    at a fixed batch width (= ``slots``); partial batches zero-pad so every
+    tick reuses the same executable. ``overlap=True`` double-buffers:
+    dispatch tick t's batch, harvest it at t+1 (see module docstring).
+    ``fuse_pool=True`` routes pool layers through the fused conv+maxpool
+    Pallas kernel (kernels/w1a8_conv/fused_pool).
     """
 
     def __init__(self, art: dict, *, slots: int = 4, interpret: bool = True,
+                 overlap: bool = False, fuse_pool: bool = False,
                  iou_thresh: float = 0.45, score_thresh: float = 0.25,
                  max_out: int = 50):
+        from repro.models import detection, yolo
         self.art = art
-        self.capacity = slots
+        self.width = slots                        # device batch per dispatch
+        self.overlap = overlap
+        self.capacity = 2 * slots if overlap else slots
+        self.admit_width = slots
         self.interpret = interpret
+        self.fuse_pool = fuse_pool
         self.post = dict(iou_thresh=iou_thresh, score_thresh=score_thresh,
                          max_out=max_out)
         self._staged: List[Tuple[int, ServeRequest]] = []
+        self._inflight: Optional[tuple] = None    # (slots, device results)
         self._emissions: Dict[int, List[Emission]] = {}
+        self.host_syncs = 0
+        self.host_sync_bytes = 0
+        self.completion_syncs = 0
+        self._input_size = yolo.INPUT_SIZE
+
+        def _bundle(imgs):
+            raw = yolo.yolo_forward_kernel(art, imgs, interpret=interpret,
+                                           fuse_pool=fuse_pool)
+            boxes, scores, classes = detection.postprocess(raw, **self.post)
+            return raw, boxes, scores, classes
+
+        self._fwd = jax.jit(_bundle)
+
+    def warmup(self) -> None:
+        """Compile + run the fixed-width bundle once so serving ticks (and
+        the overlap-on/off comparison in BENCH_serve) exclude trace time."""
+        z = jnp.zeros((self.width, self._input_size, self._input_size, 3),
+                      jnp.float32)
+        jax.block_until_ready(self._fwd(z))
 
     def admit(self, assignments: Sequence[Tuple[int, ServeRequest]]) -> None:
         self._staged.extend(assignments)
 
     def step(self) -> None:
-        if not self._staged:
-            return
-        from repro.models import detection, yolo
-        imgs = jnp.stack([self._to_float(r.image) for _, r in self._staged])
-        raw = yolo.yolo_forward_kernel(self.art, imgs,
-                                       interpret=self.interpret)
-        boxes, scores, classes = detection.postprocess(raw, **self.post)
-        for i, (slot, _) in enumerate(self._staged):
+        newly = None
+        if self._staged:
+            imgs = jnp.stack([self._to_float(r.image)
+                              for _, r in self._staged])
+            if imgs.shape[0] < self.width:       # fixed-width executable
+                imgs = jnp.pad(imgs, ((0, self.width - imgs.shape[0]),
+                                      (0, 0), (0, 0), (0, 0)))
+            newly = ([slot for slot, _ in self._staged],
+                     self._fwd(imgs))            # async dispatch
+            self._staged = []
+        if self.overlap:
+            prev, self._inflight = self._inflight, newly
+            if prev is not None:                 # harvest tick t-1's batch
+                self._emit(prev)
+        elif newly is not None:                  # single-shot: block now
+            self._emit(newly)
+
+    def _emit(self, inflight: tuple) -> None:
+        slots_, results = inflight
+        raw, boxes, scores, classes = jax.device_get(results)  # one transfer
+        self.host_syncs += 1
+        self.host_sync_bytes += sum(np.asarray(a).nbytes for a in
+                                    (raw, boxes, scores, classes))
+        for i, slot in enumerate(slots_):
             payload = {"boxes": np.asarray(boxes[i]),
                        "scores": np.asarray(scores[i]),
                        "classes": np.asarray(classes[i]),
                        "raw": np.asarray(raw[i])}
             self._emissions.setdefault(slot, []).append(
                 Emission(payload=payload, final=True))
-        self._staged = []
 
     def harvest(self) -> Dict[int, List[Emission]]:
         out, self._emissions = self._emissions, {}

@@ -25,6 +25,22 @@ class Request:
     done: bool = False
 
 
+# ServeEngine warns exactly once per process, not once per construction — a
+# server building one engine per request-pool otherwise re-warns on every
+# pool spin-up. Tests reset this to re-arm the warning.
+_deprecation_warned = False
+
+
+def _warn_deprecated_once() -> None:
+    global _deprecation_warned
+    if _deprecation_warned:
+        return
+    _deprecation_warned = True
+    warnings.warn("serve.batching.ServeEngine is deprecated; use "
+                  "serve.Scheduler with serve.LMBackend",
+                  DeprecationWarning, stacklevel=3)
+
+
 class ServeEngine:
     """Deprecated: thin shim over Scheduler + LMBackend (one global
     temperature, no stop tokens — the v1 feature set)."""
@@ -32,9 +48,7 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 256, mode: str = "float",
                  temperature: float = 0.0):
-        warnings.warn("serve.batching.ServeEngine is deprecated; use "
-                      "serve.Scheduler with serve.LMBackend",
-                      DeprecationWarning, stacklevel=2)
+        _warn_deprecated_once()
         self.cfg, self.params = cfg, params
         self.slots, self.max_len, self.mode = slots, max_len, mode
         self.temperature = temperature

@@ -116,6 +116,59 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict,
     return logits, {"slots": new_slots, "lengths": cache["lengths"] + 1}
 
 
+def decode_step_donemask(cfg: ModelConfig, params: dict, cache: dict,
+                         last_tok: jax.Array, tok_buf: jax.Array,
+                         n_gen: jax.Array, done: jax.Array,
+                         stop_tokens: jax.Array, max_new: jax.Array,
+                         temp: jax.Array, key: jax.Array, *,
+                         mode: str = "float", use_key: bool,
+                         ctx=None) -> tuple:
+    """One fused decode tick with **device-side stop detection** (the
+    streaming-serving analogue of folding the eos test into the kernel:
+    DESIGN.md §11). Sampling, the token-buffer append, and the
+    stop-token / max_new tests all stay on device — the only thing a host
+    must read back per tick is the (B,) bool ``done`` bitmask.
+
+    State arrays (all device-resident, B = pool slots):
+      last_tok (B,) int32        previous token per row (fed back each tick)
+      tok_buf  (B, cap) int32    generated tokens, row r valid in [0, n_gen)
+      n_gen    (B,) int32        tokens generated so far (incl. prefill tok)
+      done     (B,) bool         True for finished *and* for vacant rows —
+                                 a done row's buffers freeze while the fused
+                                 step keeps advancing the full batch
+      stop_tokens (B, S) int32   per-row stop set, -1 padding (never matches)
+      max_new  (B,) int32        per-row length budget
+      temp     (B,) f32          per-row temperature (0 → greedy)
+
+    ``use_key`` is static: the host passes True only when some live row
+    samples (temperature > 0), mirroring the host-side sampler's key
+    discipline so both paths consume the PRNG stream identically —
+    token-for-token equivalence is tested in tests/test_serve_stream.py.
+
+    Returns (cache, last_tok, tok_buf, n_gen, done).
+    """
+    logits, cache = decode_step(cfg, params, cache, last_tok[:, None],
+                                mode=mode, ctx=ctx)
+    greedy = jnp.argmax(logits, -1)
+    if use_key:
+        # same expressions as LMBackend._sample so draws are bit-identical
+        scaled = logits / jnp.maximum(temp, 1e-6)[:, None]
+        sampled = jax.random.categorical(key, scaled, -1)
+        tok = jnp.where(temp > 0, sampled, greedy)
+    else:
+        tok = greedy
+    tok = tok.astype(jnp.int32)
+    live = ~done
+    bi = jnp.arange(tok_buf.shape[0])
+    idx = jnp.minimum(n_gen, tok_buf.shape[1] - 1)
+    tok_buf = tok_buf.at[bi, idx].set(
+        jnp.where(live, tok, tok_buf[bi, idx]))
+    n_gen = n_gen + live.astype(jnp.int32)
+    is_stop = jnp.any(tok[:, None] == stop_tokens, axis=1)
+    done = done | (live & (is_stop | (n_gen >= max_new)))
+    return cache, tok.astype(jnp.int32), tok_buf, n_gen, done
+
+
 def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
             max_len: int, mode: str = "float",
             ctx=None) -> Tuple[jax.Array, dict]:

@@ -1,26 +1,40 @@
-"""Request scheduler — admission queueing, stop conditions, metrics.
+"""Request scheduler — paged admission, deadlines, stop conditions, metrics.
 
-One `tick` = admit (fill every free slot from the FIFO queue, one batched
-backend.admit call) → backend.step (one fused compute tick) → harvest
-(ingest emissions in order, finish requests on stop-token / max_new /
-final-payload, recycle their slots).
+One `tick` = admit (expire overdue waiters, then fill free slots from the
+bounded wait queue — at most `backend.admit_width` requests, one batched
+backend.admit call) → backend.step (one fused compute tick; a streaming
+backend dispatches tick t here and surfaces its results at tick t+1) →
+harvest (ingest emissions in order, finish requests on stop-token / max_new
+/ final-payload / bulk finish, recycle their slots).
+
+Admission order is **FIFO-within-deadline**: the queue pops the earliest
+(absolute admission deadline, arrival sequence) pair, so deadline-free
+traffic stays strictly FIFO and deadlined requests overtake only
+later-deadlined ones (EDF with FIFO tie-break). The wait queue is bounded
+(`max_queue`): a submit into a full queue is rejected immediately
+(finish_reason "rejected"); a waiter whose deadline passes before a slot
+frees expires (finish_reason "expired"). Both surface as ServeResults so a
+burst is always fully accounted: completed + rejected + expired = submitted.
 
 Invariants:
   * a slot is in exactly one of {free, active} between ticks;
   * emissions for one slot are ingested in emission order, and everything
     after the finishing emission is dropped (a fused decode tick may
     overrun a request's stop condition by one token);
-  * admission order is FIFO — results surface in completion order, rid-keyed.
+  * the wait queue drains to empty whenever the backend has capacity and
+    requests have no (or generous) deadlines.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
+import heapq
 import time
 from typing import Dict, List, Optional
 
 from repro.serve.api import (Backend, EngineMetrics, ServeRequest,
                              ServeResult)
+
+_NO_DEADLINE = float("inf")
 
 
 @dataclasses.dataclass
@@ -29,34 +43,75 @@ class _Active:
     tokens: List[int] = dataclasses.field(default_factory=list)
     payload: Optional[dict] = None
     admitted_tick: int = 0
+    wait_ticks: int = 0
 
 
 class Scheduler:
     def __init__(self, backend: Backend, *,
+                 max_queue: Optional[int] = None,
                  metrics: Optional[EngineMetrics] = None):
         self.backend = backend
         self.metrics = metrics or EngineMetrics(capacity=backend.capacity)
         self.metrics.capacity = backend.capacity
-        self.queue: collections.deque = collections.deque()
+        # heap of (abs_deadline, seq, submit_tick, req): FIFO within deadline
+        self.queue: List[tuple] = []
+        self.max_queue = max_queue
         self.free: List[int] = list(range(backend.capacity))
         self.active: Dict[int, _Active] = {}
         self.results: List[ServeResult] = []
+        self._seq = 0
+        # syncs already on the backend's counters (e.g. a warmup pass) are
+        # not this scheduler's to credit
+        self._synced = getattr(backend, "host_syncs", 0)
+        self._synced_bytes = getattr(backend, "host_sync_bytes", 0)
+        self._completion_synced = getattr(backend, "completion_syncs", 0)
 
     # -- submission ----------------------------------------------------------
-    def submit(self, req: ServeRequest) -> None:
-        self.queue.append(req)
+    def submit(self, req: ServeRequest) -> bool:
+        """Queue a request. Returns False (and surfaces a "rejected" result)
+        when the bounded wait queue is full."""
         self.metrics.submitted += 1
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self.metrics.rejected += 1
+            self.results.append(ServeResult(
+                rid=req.rid, finish_reason="rejected",
+                deadline_met=(False if req.deadline_ticks is not None
+                              else None)))
+            return False
+        dl = (_NO_DEADLINE if req.deadline_ticks is None
+              else self.metrics.ticks + req.deadline_ticks)
+        heapq.heappush(self.queue, (dl, self._seq, self.metrics.ticks, req))
+        self._seq += 1
+        return True
 
     # -- one scheduling tick -------------------------------------------------
+    def _expire_overdue(self) -> None:
+        """Drop waiters whose admission deadline has already passed. The
+        heap orders by deadline, so overdue entries are at the front."""
+        while self.queue and self.queue[0][0] < self.metrics.ticks:
+            _, _, submitted, req = heapq.heappop(self.queue)
+            self.metrics.expired += 1
+            self.results.append(ServeResult(
+                rid=req.rid, finish_reason="expired",
+                wait_ticks=self.metrics.ticks - submitted,
+                deadline_met=False))
+
     def admit(self) -> int:
-        """Fill free slots from the queue; one batched backend.admit call.
-        Returns the number of requests admitted."""
+        """Fill free slots from the wait queue — at most `admit_width`
+        requests (paged admission; a double-buffered backend keeps its
+        device batch width while holding 2× slots) — in one batched
+        backend.admit call. Returns the number admitted."""
+        self._expire_overdue()
+        width = getattr(self.backend, "admit_width", None) \
+            or self.backend.capacity
         batch = []
-        while self.queue and self.free:
+        while self.queue and self.free and len(batch) < width:
+            dl, _, submitted, req = heapq.heappop(self.queue)
             slot = self.free.pop(0)
-            req = self.queue.popleft()
             batch.append((slot, req))
-            self.active[slot] = _Active(req, admitted_tick=self.metrics.ticks)
+            self.active[slot] = _Active(
+                req, admitted_tick=self.metrics.ticks,
+                wait_ticks=self.metrics.ticks - submitted)
         if batch:
             self.backend.admit(batch)
         return len(batch)
@@ -76,10 +131,17 @@ class Scheduler:
                 continue
             finish = None
             for em in ems:
+                if em.tokens is not None:       # bulk (device-side done-mask)
+                    rec.tokens.extend(int(t) for t in em.tokens)
+                    tokens += len(em.tokens)
+                    if em.final:
+                        finish = em.finish or "ok"
+                        break
+                    continue
                 if em.final:
                     rec.payload = em.payload
                     images += 1
-                    finish = "ok"
+                    finish = em.finish or "ok"
                     break
                 rec.tokens.append(int(em.token))
                 tokens += 1
@@ -92,8 +154,23 @@ class Scheduler:
                     break
             if finish:
                 self._finish(slot, finish)
+        # credit this tick's blocking device→host transfers (backends keep
+        # running counters; the scheduler snapshots the step-path delta)
+        syncs = getattr(self.backend, "host_syncs", None)
+        if syncs is not None:
+            self.metrics.host_syncs += syncs - self._synced
+            self._synced = syncs
+        sbytes = getattr(self.backend, "host_sync_bytes", None)
+        if sbytes is not None:
+            self.metrics.host_sync_bytes += sbytes - self._synced_bytes
+            self._synced_bytes = sbytes
+        csyncs = getattr(self.backend, "completion_syncs", None)
+        if csyncs is not None:
+            self.metrics.completion_syncs += csyncs - self._completion_synced
+            self._completion_synced = csyncs
         self.metrics.record_tick(time.perf_counter() - t0, active_now,
-                                 tokens=tokens, images=images)
+                                 tokens=tokens, images=images,
+                                 queued=len(self.queue))
 
     def tick(self) -> None:
         t0 = time.perf_counter()
@@ -113,10 +190,13 @@ class Scheduler:
 
     def _finish(self, slot: int, reason: str) -> None:
         rec = self.active.pop(slot)
+        dl = rec.req.deadline_ticks
         self.results.append(ServeResult(
             rid=rec.req.rid, finish_reason=reason, tokens=rec.tokens,
             detections=rec.payload,
-            n_ticks=self.metrics.ticks - rec.admitted_tick + 1))
+            n_ticks=self.metrics.ticks - rec.admitted_tick + 1,
+            wait_ticks=rec.wait_ticks,
+            deadline_met=(None if dl is None else rec.wait_ticks <= dl)))
         self.metrics.completed += 1
         self.backend.release(slot)
         self.free.append(slot)

@@ -144,6 +144,38 @@ def test_moe_no_drop_when_cf_equals_experts(t, seed):
     _np.testing.assert_allclose(np.asarray(y), want, atol=3e-4)
 
 
+@settings(deadline=None, max_examples=40)
+@given(st.data())
+def test_scheduler_trace_fifo_within_deadline_no_slot_leak(data):
+    """serve v3 scheduler property: random arrival traces — bursts of 1–4B
+    requests, mixed lm/detect lifetimes, deadlines, bounded queue — must
+    admit FIFO-within-deadline, never leak slots, and end with an empty
+    wait queue (checked against the pure-python reference model in
+    tests/test_serve_stream.py; a failing example's trace is printed in
+    the assertion message, and hypothesis shrinks it)."""
+    from test_serve_stream import assert_trace_ok
+    capacity = data.draw(st.integers(1, 4), label="capacity")
+    admit_width = data.draw(st.one_of(st.none(), st.integers(1, capacity)),
+                            label="admit_width")
+    rid = 0
+    trace = []
+    for _ in range(data.draw(st.integers(1, 4), label="n_bursts")):
+        idle = data.draw(st.integers(0, 2))
+        burst = []
+        for _ in range(data.draw(st.integers(1, 4 * capacity))):  # 1..4B
+            burst.append((rid,
+                          data.draw(st.sampled_from(["lm", "detect"])),
+                          data.draw(st.integers(1, 3)),        # lifetime
+                          data.draw(st.one_of(st.none(),
+                                              st.integers(0, 6)))))
+            rid += 1
+        trace.append((idle, burst))
+    max_queue = data.draw(st.one_of(st.none(),
+                                    st.integers(1, 3 * capacity)),
+                          label="max_queue")
+    assert_trace_ok(capacity, admit_width, trace, max_queue)
+
+
 @settings(deadline=None, max_examples=8)
 @given(st.integers(2, 12), st.integers(0, 50))
 def test_nms_kept_boxes_are_mutually_distant(n, seed):

@@ -202,11 +202,13 @@ def test_scheduler_per_request_temperature():
     assert len(by_rid[1].tokens) == 5
 
 
-def test_continuous_batching_engine():
+def test_continuous_batching_engine(monkeypatch):
     cfg = configs.get_reduced("granite-20b")
     params = init_lm_params(jax.random.PRNGKey(6), cfg)
     reqs = [Request(rid=i, prompt=[1 + i, 2 + i, 3], max_new=4)
             for i in range(5)]                       # 5 reqs > 3 slots
+    from repro.serve import batching
+    monkeypatch.setattr(batching, "_deprecation_warned", False)  # re-arm
     with pytest.warns(DeprecationWarning):
         eng = ServeEngine(cfg, params, slots=3, max_len=32)
     done = eng.run(list(reqs))
