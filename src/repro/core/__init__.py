@@ -1,7 +1,16 @@
 """Core W1A8 quantization engine — the paper's contribution as a library.
 
 Modules: quant (Eqs. 3-1..3-4 primitives), fixedpoint (Q-format, §4),
-packing (COE/BRAM analogue), w1a8 (composable layers), verify (§6.3
-alignment statistics).
+packing (COE/BRAM analogue), qtensor (the quantized-tensor pytree every
+layer boundary speaks), w1a8 (composable layers), verify (§6.3 alignment
+statistics).
 """
-from repro.core import fixedpoint, packing, quant, verify, w1a8  # noqa: F401
+from repro.core import (  # noqa: F401
+    fixedpoint,
+    packing,
+    qtensor,
+    quant,
+    verify,
+    w1a8,
+)
+from repro.core.qtensor import QTensor  # noqa: F401

@@ -1,0 +1,138 @@
+"""QTensor — the one quantized-tensor abstraction of the W1A8 dataflow.
+
+The paper's datapath never carries raw floats between stages: every wire is
+codes-plus-scale (uint8 activation codes with their LSQ step, 1-bit weight
+sign words with the α magnitude, int8 gradient codes with a shared abs-max
+scale). Before this module each boundary re-invented that pair ad hoc —
+``(codes, cur_steps)`` threading through ``models/yolo.py``, bare int8 codes
+inside ``dist/collectives.py``, f32 arrays on the pipeline permute wire.
+QTensor names the pair once and rides pytrees, so the same object crosses
+kernel boundaries, ``ppermute`` wires and jit boundaries unchanged.
+
+Payload conventions (``qtype``):
+
+  ``u8``   uint8 activation codes, value = data · scale, scale per-tensor or
+           per-channel along ``axis`` (the LSQ step; ``core.quant``).
+  ``s8``   symmetric int8 codes in [−127, 127], value = data · scale with a
+           per-tensor scale = abs-max/127 (the dist wire format).
+  ``b1``   1-bit sign words (uint32, 32 signs/word along the reduction axis;
+           ``core.packing``), value = unpack(data) · scale (α). ``kdim``
+           holds the unpadded logical length of the packed axis.
+  ``f32``  escape hatch: unquantized payload, scale ≡ 1.
+
+``data`` and ``scale`` are pytree children (they trace/shard/permute);
+``qtype``, ``axis`` and ``kdim`` are static aux data, so a QTensor's wire
+format is part of its pytree structure — two QTensors with different
+formats never silently unify under ``jax.lax.cond``/``jnp.where``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.quant import ACT_QMAX, round_half_away
+
+S8_QMAX = 127  # symmetric int8 code range [-127, 127] (dist wire format)
+
+_QTYPES = ("u8", "s8", "b1", "f32")
+
+
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    """dtype-tagged quantized payload + scale, registered as a pytree."""
+
+    data: jax.Array                 # codes / sign words / raw payload
+    scale: jax.Array                # per-tensor scalar or per-channel vector
+    qtype: str = "u8"               # one of _QTYPES (static)
+    axis: Optional[int] = None      # channel axis of a per-channel scale
+    kdim: Optional[int] = None      # b1: unpadded length of the packed axis
+
+    def __post_init__(self):
+        if self.qtype not in _QTYPES:
+            raise ValueError(f"unknown qtype {self.qtype!r}")
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def quantize_u8(cls, x: jax.Array, step: jax.Array,
+                    axis: Optional[int] = None) -> "QTensor":
+        """clip(round(x/s), 0, 255) uint8 codes (Eq. 3-3 discipline)."""
+        codes = jnp.clip(round_half_away(x / step), 0,
+                         ACT_QMAX).astype(jnp.uint8)
+        return cls(codes, jnp.asarray(step, jnp.float32), "u8", axis=axis)
+
+    @classmethod
+    def from_codes(cls, codes: jax.Array, step: jax.Array,
+                   axis: Optional[int] = None) -> "QTensor":
+        """Wrap already-quantized uint8 codes with their step."""
+        return cls(codes, jnp.asarray(step, jnp.float32), "u8", axis=axis)
+
+    @classmethod
+    def quantize_s8(cls, x: jax.Array,
+                    scale: Optional[jax.Array] = None) -> "QTensor":
+        """Symmetric int8 with per-tensor scale = abs-max/127 (dist wire).
+
+        An explicit ``scale`` (e.g. a pmax-shared one) overrides the local
+        abs-max so codes from different shards stay summable.
+        """
+        x = jnp.asarray(x)
+        if scale is None:
+            scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-20) / S8_QMAX
+        codes = jnp.clip(round_half_away(x / scale), -S8_QMAX,
+                         S8_QMAX).astype(jnp.int8)
+        return cls(codes, jnp.asarray(scale, jnp.float32), "s8")
+
+    @classmethod
+    def pack_b1(cls, w: jax.Array, alpha: Optional[jax.Array] = None,
+                axis: int = 0) -> "QTensor":
+        """Pack sign bits along the reduction ``axis`` (Eq. 3-1 + §4 COE)."""
+        if alpha is None:
+            alpha = jnp.mean(jnp.abs(w), axis=axis)
+        return cls(packing.pack_signs(w, axis=axis),
+                   jnp.asarray(alpha, jnp.float32), "b1", axis=axis,
+                   kdim=int(w.shape[axis]))
+
+    @classmethod
+    def from_f32(cls, x: jax.Array) -> "QTensor":
+        return cls(jnp.asarray(x), jnp.ones((), jnp.float32), "f32")
+
+    # -- views ---------------------------------------------------------------
+    def dequantize(self) -> jax.Array:
+        """Back to f32 values (codes · scale; b1 unpacks to ±1 · α)."""
+        if self.qtype == "b1":
+            signs = packing.unpack_signs(self.data, self.kdim,
+                                         axis=self.axis, dtype=jnp.float32)
+            return signs * self.scale
+        return self.data.astype(jnp.float32) * self.scale
+
+    @property
+    def per_tensor(self) -> bool:
+        return jnp.ndim(self.scale) == 0 or jnp.size(self.scale) == 1
+
+    def scale_scalar(self) -> jax.Array:
+        """The per-tensor scale (contract of the popcount/exact paths)."""
+        return jnp.reshape(self.scale, (-1,))[0]
+
+    def wire_bytes(self) -> int:
+        """Payload + scale bytes this tensor costs on a wire (vs f32)."""
+        return int(self.data.size * self.data.dtype.itemsize
+                   + jnp.size(self.scale) * 4)
+
+    def __repr__(self) -> str:  # concise — data/scale may be tracers
+        return (f"QTensor(qtype={self.qtype!r}, shape={self.data.shape}, "
+                f"scale_shape={jnp.shape(self.scale)}, axis={self.axis})")
+
+
+def _flatten(qt: QTensor):
+    return (qt.data, qt.scale), (qt.qtype, qt.axis, qt.kdim)
+
+
+def _unflatten(aux, children) -> QTensor:
+    qtype, axis, kdim = aux
+    return QTensor(children[0], children[1], qtype, axis=axis, kdim=kdim)
+
+
+jax.tree_util.register_pytree_node(QTensor, _flatten, _unflatten)

@@ -122,6 +122,18 @@ def init_step_from_batch(x: jax.Array) -> jax.Array:
     return 2.0 * jnp.mean(jnp.abs(x)) / jnp.sqrt(jnp.asarray(ACT_QMAX, x.dtype))
 
 
+def requant_epilogue(y: jax.Array, out_step: float,
+                     out_dtype=jnp.uint8) -> jax.Array:
+    """Requantize an f32 post-scale accumulator to next-layer uint8 codes.
+
+    q = clip(round_half_away(y / s_out), 0, 255) — the Eq. 3-3 epilogue the
+    conv, fused conv+pool, and matmul kernels all apply after Div_current
+    and bias. One definition so the three paths cannot drift in rounding.
+    """
+    q = round_half_away(y / out_step)
+    return jnp.clip(q, 0, ACT_QMAX).astype(out_dtype)
+
+
 # ---------------------------------------------------------------------------
 # Eq. 3-2 / 3-4: sign-controlled accumulation (reference semantics)
 # ---------------------------------------------------------------------------

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat  # noqa: F401
+from repro.core.qtensor import QTensor
 from repro.core.quant import round_half_away
 
 tmap = jax.tree_util.tree_map
@@ -87,5 +88,47 @@ def wire_bytes_saved(tree, n: int) -> dict:
     f = (n - 1) / max(n, 1)
     f32 = 2 * 4 * numel * f
     int8 = 2 * 1 * numel * f
+    return {"f32_bytes": f32, "int8_bytes": int8,
+            "ratio": f32 / max(int8, 1)}
+
+
+# ---------------------------------------------------------------------------
+# Point-to-point int8 wire: the pipeline-stage collective_permute payload.
+# ---------------------------------------------------------------------------
+
+def quantize_wire(x: jax.Array) -> QTensor:
+    """f32 → symmetric-int8 QTensor with a *local* per-tensor scale.
+
+    Unlike the all-reduce legs there is no cross-shard sum here — each
+    stage-to-stage hop carries exactly one tensor from one sender — so no
+    pmax'd shared scale is needed: the 4-byte scale rides the wire next to
+    its codes (the QTensor's two pytree leaves are the wire format).
+    """
+    return QTensor.quantize_s8(x)
+
+
+def dequantize_wire(qt: QTensor, dtype=jnp.float32) -> jax.Array:
+    return qt.dequantize().astype(dtype)
+
+
+def permute_quantized(x: jax.Array, axis: str, perm) -> jax.Array:
+    """``ppermute`` with int8 codes + f32 scale on the wire instead of f32.
+
+    quantize → permute the QTensor (a pytree: both leaves hop together) →
+    dequantize on the receiver. Devices outside ``perm`` receive zeros for
+    both leaves, so they dequantize to exactly 0 — identical boundary
+    semantics to a plain f32 ppermute. Error envelope: symmetric int8
+    round-half-away ⇒ |x̂ − x| ≤ scale/2 = max|x|/254 per element
+    (~0.4%·max per hop), the bound the dist tests assert.
+    """
+    qt = jax.lax.ppermute(quantize_wire(x), axis, perm)
+    return dequantize_wire(qt, x.dtype)
+
+
+def permute_wire_bytes(x: jax.Array, n_hops: int) -> dict:
+    """Accounting: per-schedule-tick permute payload, f32 vs int8 wire."""
+    numel = int(jnp.size(x))
+    f32 = 4 * numel * n_hops
+    int8 = (1 * numel + 4) * n_hops
     return {"f32_bytes": f32, "int8_bytes": int8,
             "ratio": f32 / max(int8, 1)}

@@ -42,7 +42,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import compat  # noqa: F401
-from repro.dist.collectives import tree_quantized_allreduce
+from repro.dist.collectives import (permute_quantized,
+                                    tree_quantized_allreduce)
 
 tmap = jax.tree_util.tree_map
 
@@ -86,7 +87,8 @@ def gpipe_reference(stage_fn: Callable, ws, x: jax.Array) -> jax.Array:
     return x
 
 
-def gpipe(stage_fn: Callable, *, mesh, axis: str, num_micro: int) -> Callable:
+def gpipe(stage_fn: Callable, *, mesh, axis: str, num_micro: int,
+          act_wire: str = "fp32") -> Callable:
     """Build ``f(ws, x)``: the pipelined equivalent of sequentially applying
     ``n = mesh.shape[axis]`` stages to ``num_micro`` microbatches.
 
@@ -94,7 +96,11 @@ def gpipe(stage_fn: Callable, *, mesh, axis: str, num_micro: int) -> Callable:
     must be shape-preserving so activations can hop between devices).
     ws: pytree of stage-stacked weights, every leaf shaped (n, ...).
     x: (num_micro, mb, ...) microbatched input, replicated.
+    ``act_wire="int8"`` ships the stage-hop activations as int8 codes +
+    f32 scale (``dist.collectives.permute_quantized``) instead of f32.
     """
+    if act_wire not in ("fp32", "int8"):
+        raise ValueError(f"unknown act_wire {act_wire!r}")
     n = int(mesh.shape[axis])
     ticks = num_micro + n - 1
     shift_right = [(i, i + 1) for i in range(n - 1)]
@@ -112,7 +118,9 @@ def gpipe(stage_fn: Callable, *, mesh, axis: str, num_micro: int) -> Callable:
             if 0 <= m < num_micro:
                 ys = ys.at[m].set(jnp.where(idx == n - 1, out, ys[m]))
             if t < ticks - 1:
-                carry = jax.lax.ppermute(out, axis, shift_right)
+                carry = (permute_quantized(out, axis, shift_right)
+                         if act_wire == "int8" else
+                         jax.lax.ppermute(out, axis, shift_right))
         # only the last stage holds results; psum replicates them
         return jax.lax.psum(ys, axis)
 
@@ -155,7 +163,8 @@ def _schedule_constants(num_stages: int, num_micro: int,
 
 def pipeline_train_local(stage_fn: Callable, loss_fn: Callable, *,
                          axis: str, num_stages: int, num_micro: int,
-                         schedule: str = "1f1b") -> Callable:
+                         schedule: str = "1f1b",
+                         act_wire: str = "fp32") -> Callable:
     """Per-device pipelined fwd+bwd, for use *inside* a ``shard_map``.
 
     Returns ``local(ws_l, top, x_all, aux) → (loss, dw, dtop, dx)`` where
@@ -176,7 +185,18 @@ def pipeline_train_local(stage_fn: Callable, loss_fn: Callable, *,
     1F1B — and the math is op-for-op the oracle's VJP.
     """
     n, num_m = num_stages, num_micro
+    if act_wire not in ("fp32", "int8"):
+        raise ValueError(f"unknown act_wire {act_wire!r}")
     sc = _schedule_constants(n, num_m, schedule)
+
+    def hop(x, perm):
+        # the stage-boundary wire: both the rightward activation wave and
+        # the leftward cotangent wave cross it (int8 codes + f32 scale
+        # when act_wire="int8" — 1 byte/elem of ICI, like every other
+        # boundary in the W1A8 dataflow)
+        if act_wire == "int8":
+            return permute_quantized(x, axis, perm)
+        return jax.lax.ppermute(x, axis, perm)
     shift_right = [(i, i + 1) for i in range(n - 1)]
     shift_left = [(i + 1, i) for i in range(n - 1)]
 
@@ -230,7 +250,7 @@ def pipeline_train_local(stage_fn: Callable, loss_fn: Callable, *,
                 dxs = jax.lax.dynamic_update_index_in_dim(
                     dxs, jnp.where(valid & first, dx_m, prev), m_c, 0)
                 if t < sc["bwd_hi"]:
-                    ct_in = jax.lax.ppermute(dx_m, axis, shift_left)
+                    ct_in = hop(dx_m, shift_left)
             if t <= sc["fwd_hi"]:
                 m_f = t - idx
                 valid = (m_f >= 0) & (m_f < num_m)
@@ -242,7 +262,7 @@ def pipeline_train_local(stage_fn: Callable, loss_fn: Callable, *,
                 stash = jax.lax.dynamic_update_index_in_dim(
                     stash, jnp.where(valid, x_in, prev), slot, 0)
                 if t < sc["fwd_hi"]:
-                    carry = jax.lax.ppermute(out, axis, shift_right)
+                    carry = hop(out, shift_right)
 
         inv = 1.0 / num_m                           # grads of the MEAN loss
         gw = tmap(lambda g, p: (g * inv).astype(p.dtype), gw, w)
@@ -280,7 +300,8 @@ def reduce_pipeline_outputs(loss, gw, gtop, dxs, *, axis: str,
 def pipeline_train_step(stage_fn: Callable, loss_fn: Callable, *, mesh,
                         axis: str, num_micro: int, schedule: str = "1f1b",
                         dp_axis: Optional[str] = None,
-                        grad_wire: str = "fp32") -> Callable:
+                        grad_wire: str = "fp32",
+                        act_wire: str = "fp32") -> Callable:
     """Build ``f(ws, x, aux=None, top=None)``: pipelined training over
     ``n = mesh.shape[axis]`` stages, numerically matching the sequential
     :func:`pipeline_train_reference` oracle.
@@ -291,6 +312,10 @@ def pipeline_train_step(stage_fn: Callable, loss_fn: Callable, *, mesh,
     it — over the int8 wire (``dist.collectives``) when
     ``grad_wire == 'int8'``, else an exact ``pmean``.
     loss_fn(top, y_mb, aux_mb) → scalar mean-reduced per microbatch.
+    ``act_wire == 'int8'`` additionally carries the stage-boundary
+    ``collective_permute`` payloads — forward activations *and* backward
+    cotangents — as int8 codes + f32 scale (4× less ICI per hop; adds the
+    per-hop quantization noise the dist tests bound).
 
     Returns ``(loss, grads)``; with ``top`` given, ``(loss, grads,
     grads_top, dx)`` where ``dx`` is the cotangent of ``x`` (so callers can
@@ -300,7 +325,8 @@ def pipeline_train_step(stage_fn: Callable, loss_fn: Callable, *, mesh,
         raise ValueError(f"unknown grad_wire {grad_wire!r}")
     n = int(mesh.shape[axis])
     local = pipeline_train_local(stage_fn, loss_fn, axis=axis, num_stages=n,
-                                 num_micro=num_micro, schedule=schedule)
+                                 num_micro=num_micro, schedule=schedule,
+                                 act_wire=act_wire)
     cache = {}
 
     def run(ws, x, aux=None, top=None):

@@ -19,7 +19,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat  # noqa: F401  (pltpu.CompilerParams on older jax)
 from repro.core.packing import PACK
-from repro.core.quant import round_half_away
+from repro.core.quant import requant_epilogue
 from repro.kernels.w1a8_matmul.kernel import _unpack_tile
 
 
@@ -41,7 +41,8 @@ def _kernel(r0_ref, r1_ref, r2_ref, r3_ref, wp_ref, m_ref, d_ref, b_ref,
         am = (cols * m).astype(compute_dtype)
         y = jnp.dot(am, signs, preferred_element_type=jnp.float32)
         y = y * div + bias
-        return jnp.clip(round_half_away(y / out_step), 0, 255)  # (W, Cout)
+        # f32 carrier for the 2×2 max; values are exact uint8 codes
+        return requant_epilogue(y, out_step, jnp.float32)    # (W, Cout)
 
     y0 = conv_row(0)
     y1 = conv_row(1)

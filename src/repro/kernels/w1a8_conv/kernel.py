@@ -24,21 +24,26 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat  # noqa: F401  (pltpu.CompilerParams on older jax)
 from repro.core.packing import PACK
-from repro.core.quant import round_half_away
-from repro.kernels.w1a8_matmul.kernel import _unpack_tile
+from repro.core.quant import requant_epilogue
+from repro.kernels.w1a8_matmul.kernel import _unpack_tile, _xnor_accumulate
+
+
+def _im2col_row(rows, w_out: int, k9p: int, dtype):
+    """Three staged line buffers → one output row's (W, K9p) im2col block
+    in (dy, dx, cin) order — the "3x3 window former"."""
+    cols = jnp.concatenate(
+        [rows[dy][dx:dx + w_out, :] for dy in range(3) for dx in range(3)],
+        axis=-1).astype(dtype)                             # (W, 9Cin)
+    if cols.shape[1] < k9p:                                # K padding lanes
+        cols = jnp.pad(cols, ((0, 0), (0, k9p - cols.shape[1])))
+    return cols
 
 
 def _conv_kernel(rm1_ref, r0_ref, rp1_ref, wp_ref, m_ref, d_ref, b_ref,
                  o_ref, *, w_out: int, k9p: int, cout: int,
                  out_step: Optional[float], compute_dtype):
     rows = [rm1_ref[0, 0], r0_ref[0, 0], rp1_ref[0, 0]]   # each (Wp, Cin)
-    # im2col for one output row: (W, 9*Cin) in (dy, dx, cin) order —
-    # the "3x3 window former" fed by the three line buffers.
-    cols = jnp.concatenate(
-        [rows[dy][dx:dx + w_out, :] for dy in range(3) for dx in range(3)],
-        axis=-1).astype(jnp.float32)                       # (W, 9Cin)
-    if cols.shape[1] < k9p:                                # K padding lanes
-        cols = jnp.pad(cols, ((0, 0), (0, k9p - cols.shape[1])))
+    cols = _im2col_row(rows, w_out, k9p, jnp.float32)
     am = (cols * m_ref[...].astype(jnp.float32)).astype(compute_dtype)
     signs = _unpack_tile(wp_ref[...], k9p, cout, compute_dtype)
     y = jnp.dot(am, signs, preferred_element_type=jnp.float32)
@@ -46,44 +51,74 @@ def _conv_kernel(rm1_ref, r0_ref, rp1_ref, wp_ref, m_ref, d_ref, b_ref,
     if out_step is None:
         o_ref[0, 0] = y.astype(o_ref.dtype)
     else:
-        q = round_half_away(y / out_step)       # same rounding as ref.py
-        o_ref[0, 0] = jnp.clip(q, 0, 255).astype(o_ref.dtype)
+        o_ref[0, 0] = requant_epilogue(y, out_step, o_ref.dtype)
+
+
+def _conv_popcount_kernel(rm1_ref, r0_ref, rp1_ref, wp_ref, d_ref, b_ref,
+                          o_ref, *, w_out: int, k9p: int, cout: int,
+                          out_step: Optional[float]):
+    """Binary-domain conv row: the im2col codes never leave the 1-bit/8-bit
+    domain — bit-planes are packed to uint32 words and contracted against
+    the stored weight words with AND+popcount (the FPGA PE's XNOR tree).
+    Uniform-Mul_prev contract: ops.py folds the scalar step into Div.
+    """
+    rows = [rm1_ref[0, 0], r0_ref[0, 0], rp1_ref[0, 0]]
+    cols = _im2col_row(rows, w_out, k9p, jnp.uint32)
+    s = _xnor_accumulate(cols, wp_ref[...], k9p).astype(jnp.float32)
+    y = s * d_ref[...].astype(jnp.float32) + b_ref[...].astype(jnp.float32)
+    if out_step is None:
+        o_ref[0, 0] = y.astype(o_ref.dtype)
+    else:
+        o_ref[0, 0] = requant_epilogue(y, out_step, o_ref.dtype)
 
 
 def w1a8_conv3x3_pallas(a_pad: jax.Array, w_packed: jax.Array,
                         mul9: jax.Array, div_post: jax.Array,
                         bias: jax.Array, *, out_step: Optional[float] = None,
+                        accum: str = "dot",
                         compute_dtype=jnp.bfloat16,
                         interpret: bool = False) -> jax.Array:
     """a_pad: (B, H+2, W+2, Cin) uint8 (SAME-padded, K-padding included in
     w/mul layout); w_packed: (K9p/32, Cout); mul9: (1, K9p) with zeros in
     padded lanes; div_post/bias: (1, Cout). Returns (B, H, W, Cout).
+
+    accum="popcount" contracts in the binary domain (uniform-Mul_prev
+    contract — caller folds the scalar step into div_post and passes
+    mul9 only for its K9p layout).
     """
     b, hp, wp_, cin = a_pad.shape
     h, w_out = hp - 2, wp_ - 2
     k9p = mul9.shape[1]
     cout = w_packed.shape[1]
     assert w_packed.shape[0] * PACK == k9p
-    kernel = functools.partial(_conv_kernel, w_out=w_out, k9p=k9p, cout=cout,
-                               out_step=out_step, compute_dtype=compute_dtype)
+    assert accum in ("dot", "popcount"), accum
     def row(dy):
         return pl.BlockSpec((1, 1, wp_, cin),
                             lambda bb, i, dy=dy: (bb, i + dy, 0, 0))
+    wspec = pl.BlockSpec((k9p // PACK, cout), lambda bb, i: (0, 0))
+    cspec = pl.BlockSpec((1, cout), lambda bb, i: (0, 0))
+    if accum == "popcount":
+        kernel = functools.partial(_conv_popcount_kernel, w_out=w_out,
+                                   k9p=k9p, cout=cout, out_step=out_step)
+        in_specs = [row(0), row(1), row(2), wspec, cspec, cspec]
+        operands = (a_pad, a_pad, a_pad, w_packed, div_post, bias)
+    else:
+        kernel = functools.partial(_conv_kernel, w_out=w_out, k9p=k9p,
+                                   cout=cout, out_step=out_step,
+                                   compute_dtype=compute_dtype)
+        in_specs = [row(0), row(1), row(2), wspec,
+                    pl.BlockSpec((1, k9p), lambda bb, i: (0, 0)),
+                    cspec, cspec]
+        operands = (a_pad, a_pad, a_pad, w_packed, mul9, div_post, bias)
     out_dtype = jnp.float32 if out_step is None else jnp.uint8
     return pl.pallas_call(
         kernel,
         grid=(b, h),
-        in_specs=[
-            row(0), row(1), row(2),                         # 3 line buffers
-            pl.BlockSpec((k9p // PACK, cout), lambda bb, i: (0, 0)),
-            pl.BlockSpec((1, k9p), lambda bb, i: (0, 0)),
-            pl.BlockSpec((1, cout), lambda bb, i: (0, 0)),
-            pl.BlockSpec((1, cout), lambda bb, i: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, w_out, cout),
                                lambda bb, i: (bb, i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h, w_out, cout), out_dtype),
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(a_pad, a_pad, a_pad, w_packed, mul9, div_post, bias)
+    )(*operands)

@@ -35,16 +35,26 @@ def conv_mul9(mul_prev: jax.Array) -> jax.Array:
     return jnp.pad(m9, (0, k9p - k9)).reshape(1, k9p)
 
 
-@functools.partial(jax.jit, static_argnames=("cin", "out_step", "interpret",
-                                             "use_kernel"))
+@functools.partial(jax.jit, static_argnames=("cin", "out_step", "accum",
+                                             "interpret", "use_kernel"))
 def w1a8_conv3x3(a_u8: jax.Array, w_packed: jax.Array, mul_prev: jax.Array,
                  div_post: jax.Array, bias: jax.Array, *, cin: int,
-                 out_step: Optional[float] = None, interpret: bool = True,
+                 out_step: Optional[float] = None, accum: str = "dot",
+                 interpret: bool = True,
                  use_kernel: bool = True) -> jax.Array:
     """Streaming 3×3 SAME conv on uint8 codes.
 
     a_u8 (B,H,W,Cin); w_packed (ceil(9Cin/32),Cout); mul_prev (Cin,);
     div_post/bias (Cout,). Returns (B,H,W,Cout) f32, or uint8 if out_step.
+
+    accum="popcount" contracts in the binary domain (XNOR-popcount instead
+    of unpack-then-dot). That path cannot apply a per-input-channel
+    Mul_prev inside the accumulation, so it requires a *uniform* mul_prev
+    (per-tensor step) whose scalar is folded into Div_current here:
+    ``S·(div·m) + bias`` — the exact same f32 epilogue expression as the
+    dot path with canonical ``(mul=1, div·m)`` operands, hence bit-exact.
+    Non-uniform mul_prev silently uses only ``mul_prev[0]``; callers with
+    concrete scales (``models/yolo.py``) assert uniformity host-side.
     """
     if not use_kernel:
         return _ref.w1a8_conv3x3_ref(
@@ -57,10 +67,13 @@ def w1a8_conv3x3(a_u8: jax.Array, w_packed: jax.Array, mul_prev: jax.Array,
     if wp.shape[0] != k9p // PACK:
         wp = jnp.pad(wp, ((0, k9p // PACK - wp.shape[0]), (0, 0)))
     cout = wp.shape[1]
+    dv = div_post.astype(jnp.float32).reshape(1, cout)
+    if accum == "popcount":
+        dv = dv * mul_prev.astype(jnp.float32).reshape(-1)[0]
     return _k.w1a8_conv3x3_pallas(
-        a_pad, wp, mul9, div_post.astype(jnp.float32).reshape(1, cout),
+        a_pad, wp, mul9, dv,
         bias.astype(jnp.float32).reshape(1, cout),
-        out_step=out_step, interpret=interpret)
+        out_step=out_step, accum=accum, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("cin", "out_step", "interpret",

@@ -28,7 +28,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat  # noqa: F401  (pltpu.CompilerParams on older jax)
 from repro.core.packing import PACK
-from repro.core.quant import round_half_away
+from repro.core.quant import requant_epilogue
 
 DEF_BM, DEF_BK, DEF_BN = 256, 512, 256
 
@@ -39,6 +39,43 @@ def _unpack_tile(wp_tile: jax.Array, bk: int, bn: int, dtype) -> jax.Array:
     bits = (wp_tile[:, None, :] >> shifts) & jnp.uint32(1)
     signs = bits.astype(jnp.int8) * jnp.int8(2) - jnp.int8(1)
     return signs.reshape(bk, bn).astype(dtype)
+
+
+def _pack_act_bitplane(a_u32: jax.Array, bit: int, kp: int) -> jax.Array:
+    """Bit-plane ``bit`` of uint8 codes (M, Kp) → (M, Kp/32) uint32 words.
+
+    Same LSB-first convention as ``core.packing.pack_signs`` so the words
+    AND directly against the stored weight sign words.
+    """
+    m = a_u32.shape[0]
+    bits = (a_u32 >> jnp.uint32(bit)) & jnp.uint32(1)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (m, kp // PACK, PACK), 2)
+    return jnp.sum(bits.reshape(m, kp // PACK, PACK) << shifts, axis=2,
+                   dtype=jnp.uint32)
+
+
+def _xnor_accumulate(a_u32: jax.Array, wp_tile: jax.Array,
+                     kp: int) -> jax.Array:
+    """Σ_k sign_k·a_k via XNOR-popcount on packed words — exact int32.
+
+    a_u32: (M, Kp) uint8 codes held as uint32; wp_tile: (Kp/32, N) sign
+    words (bit=1 ⇔ +1). FracBNN-style bit decomposition: a = Σ_b 2^b·a_b
+    with a_b ∈ {0,1}, and for each binary plane
+        Σ_k s_k·a_{b,k} = 2·popcount(w ∧ a_b) − popcount(a_b)
+    so the whole inner product is bitwise AND + population_count — no
+    unpack, no multiply. Zero codes contribute 0 to both terms, so K
+    padding lanes (zero activations, +1 weight pad bits) are free.
+    """
+    acc = jnp.zeros((a_u32.shape[0], wp_tile.shape[1]), jnp.int32)
+    for bit in range(8):
+        words = _pack_act_bitplane(a_u32, bit, kp)          # (M, Kp/32)
+        pc = jnp.sum(jax.lax.population_count(
+            words[:, :, None] & wp_tile[None, :, :]).astype(jnp.int32),
+            axis=1)                                          # (M, N)
+        cnt = jnp.sum(jax.lax.population_count(words).astype(jnp.int32),
+                      axis=1, keepdims=True)                 # (M, 1)
+        acc = acc + ((2 * pc - cnt) << bit)
+    return acc
 
 
 def _matmul_kernel(a_ref, wp_ref, m_ref, d_ref, b_ref, o_ref, acc_ref, *,
@@ -64,8 +101,68 @@ def _matmul_kernel(a_ref, wp_ref, m_ref, d_ref, b_ref, o_ref, acc_ref, *,
         if out_step is None:
             o_ref[...] = y.astype(o_ref.dtype)
         else:
-            q = round_half_away(y / out_step)   # same rounding as ref.py
-            o_ref[...] = jnp.clip(q, 0, 255).astype(o_ref.dtype)
+            o_ref[...] = requant_epilogue(y, out_step, o_ref.dtype)
+
+
+def _popcount_matmul_kernel(a_ref, wp_ref, d_ref, b_ref, o_ref, acc_ref, *,
+                            nk: int, bk: int, out_step: Optional[float]):
+    """XNOR-popcount accumulation (uniform-Mul_prev contract).
+
+    No per-input-channel prologue is possible once the activations are bit
+    packed, so this path requires a uniform input step; ops.py folds that
+    scalar into Div_current so the epilogue expression — and hence the
+    rounding — is identical to the dot path's.
+    """
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _xnor_accumulate(a_ref[...].astype(jnp.uint32),
+                                     wp_ref[...], bk)
+
+    @pl.when(kk == nk - 1)
+    def _epilogue():
+        y = acc_ref[...].astype(jnp.float32) * d_ref[...].astype(jnp.float32) \
+            + b_ref[...].astype(jnp.float32)
+        if out_step is None:
+            o_ref[...] = y.astype(o_ref.dtype)
+        else:
+            o_ref[...] = requant_epilogue(y, out_step, o_ref.dtype)
+
+
+def w1a8_matmul_popcount_pallas(a_u8: jax.Array, w_packed: jax.Array,
+                                div_post: jax.Array, bias: jax.Array, *,
+                                out_step: Optional[float] = None,
+                                bm: int = DEF_BM, bk: int = DEF_BK,
+                                bn: int = DEF_BN,
+                                interpret: bool = False) -> jax.Array:
+    """Binary-domain matmul: same shapes/epilogue as ``w1a8_matmul_pallas``
+    minus the Mul_prev operand (already folded into ``div_post``)."""
+    m, k = a_u8.shape
+    n = w_packed.shape[1]
+    assert k % bk == 0 and m % bm == 0 and n % bn == 0 and bk % PACK == 0
+    nk = k // bk
+    kernel = functools.partial(_popcount_matmul_kernel, nk=nk, bk=bk,
+                               out_step=out_step)
+    out_dtype = jnp.float32 if out_step is None else jnp.uint8
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // PACK, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a_u8, w_packed, div_post, bias)
 
 
 def w1a8_matmul_pallas(a_u8: jax.Array, w_packed: jax.Array,

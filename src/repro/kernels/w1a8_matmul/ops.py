@@ -28,16 +28,20 @@ def _pick(dim: int, pref: int, mult: int) -> int:
     return max(mult, _round_up(dim, mult))
 
 
-@functools.partial(jax.jit, static_argnames=("k", "out_step", "interpret",
-                                             "use_kernel"))
+@functools.partial(jax.jit, static_argnames=("k", "out_step", "accum",
+                                             "interpret", "use_kernel"))
 def w1a8_matmul(a_u8: jax.Array, w_packed: jax.Array, mul_prev: jax.Array,
                 div_post: jax.Array, bias: jax.Array, *, k: int,
-                out_step: Optional[float] = None, interpret: bool = True,
-                use_kernel: bool = True) -> jax.Array:
+                out_step: Optional[float] = None, accum: str = "dot",
+                interpret: bool = True, use_kernel: bool = True) -> jax.Array:
     """y = ((a ⊙ mul_prev) @ unpack(w_packed)) ⊙ div_post + bias  [+ requant].
 
     a_u8: (..., K) uint8 codes; w_packed: (ceil(K/32), N) uint32;
     mul_prev: (K,) f32; div_post, bias: (N,) f32.
+
+    accum="popcount": XNOR-popcount contraction (uniform-Mul_prev
+    contract; the scalar ``mul_prev[0]`` is folded into div_post so the
+    epilogue — and the rounding — matches the dot path bit for bit).
     """
     if not use_kernel:
         y = _ref.w1a8_matmul_ref(a_u8, w_packed, k, mul_prev, div_post, bias,
@@ -64,8 +68,16 @@ def w1a8_matmul(a_u8: jax.Array, w_packed: jax.Array, mul_prev: jax.Array,
     dv = jnp.pad(div_post.astype(jnp.float32), (0, np_ - n)).reshape(1, np_)
     bs = jnp.pad(bias.astype(jnp.float32), (0, np_ - n)).reshape(1, np_)
 
-    y = _k.w1a8_matmul_pallas(a2, wp, mul, dv, bs, out_step=out_step,
-                              bm=bm, bk=bk, bn=bn, interpret=interpret)
+    if accum == "popcount":
+        # zero-padded K lanes contribute 0 to popcount on their own —
+        # no mul operand needed, its scalar folds into Div_current.
+        dv = dv * mul_prev.astype(jnp.float32).reshape(-1)[0]
+        y = _k.w1a8_matmul_popcount_pallas(a2, wp, dv, bs, out_step=out_step,
+                                           bm=bm, bk=bk, bn=bn,
+                                           interpret=interpret)
+    else:
+        y = _k.w1a8_matmul_pallas(a2, wp, mul, dv, bs, out_step=out_step,
+                                  bm=bm, bk=bk, bn=bn, interpret=interpret)
     return y[:m, :n].reshape(lead + (n,))
 
 

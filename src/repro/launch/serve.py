@@ -13,13 +13,20 @@ the two backends:
   detect  — the paper's deployed artifact: batched 320×320 image requests
             through the packed-W1A8 YOLO Pallas path + NMS, with a
             core.verify alignment check against the float reference. Runs
-            single-shot AND double-buffered (overlap) over the same images
-            and records both; ``--burst 4x`` submits the whole stream as
-            one burst (4× the slot width) through the bounded wait queue
-            and asserts zero drops and ≤ 1 host sync per tick.
+            three configurations over the same images: single-shot raw
+            wire, double-buffered raw wire, and the HEADLINE double-
+            buffered device-NMS wire (compact fp16/int8 detections, no raw
+            head on the sync path) — asserting the device-NMS detection
+            set matches the raw-wire path and shrinks per-sync bytes
+            ≥ 10×. ``--burst 4x`` submits the whole stream as one burst
+            (4× the slot width) through the bounded wait queue and asserts
+            zero drops and ≤ 1 host sync per tick.
 
 Writes/merges throughput + latency + occupancy + host-sync numbers into
 ``benchmarks/results/BENCH_serve.json`` (methodology: EXPERIMENTS.md §Serve).
+``--gate-bench`` reads the committed record for the workload BEFORE
+overwriting it and fails when the new ``host_sync_bytes_per_tick`` regresses
+above committed × 1.05 — the CI guard on the serving wire.
 """
 from __future__ import annotations
 
@@ -137,9 +144,10 @@ def run_detect(args) -> dict:
         jax.random.PRNGKey(args.seed),
         jnp.asarray(imgs_u8[:1], jnp.float32) / 256.0)
 
-    def serve(overlap: bool):
+    def serve(overlap: bool, device_nms: bool = False):
         backend = DetectionBackend(art, slots=args.slots, overlap=overlap,
-                                   fuse_pool=args.fuse_pool)
+                                   fuse_pool=args.fuse_pool,
+                                   device_nms=device_nms)
         backend.warmup()                  # compile outside the timed ticks
         sched = Scheduler(backend, max_queue=max(n_req, 1))
         results = sched.run([ServeRequest(rid=i, image=imgs_u8[i])
@@ -147,7 +155,8 @@ def run_detect(args) -> dict:
         return results, sched.metrics.summary()
 
     ss_results, ss_summary = serve(overlap=False)
-    ov_results, summary = serve(overlap=True)
+    ov_results, ov_summary = serve(overlap=True)
+    dn_results, summary = serve(overlap=True, device_nms=True)  # headline
 
     # overlap correctness: double-buffered serving is bit-exact vs
     # single-shot (same fixed-width executable, same batch composition)
@@ -155,6 +164,35 @@ def run_detect(args) -> dict:
     for r in ov_results:
         assert np.array_equal(r.detections["raw"], ss_raw[r.rid]), \
             f"overlap raw head diverged for rid {r.rid}"
+
+    # device-NMS wire correctness: same NMS ran on device in both modes —
+    # the compact fp16/int8 emissions must carry the identical detection set
+    host_sets = {r.rid: detection.detections_to_list(
+        r.detections["boxes"], r.detections["scores"],
+        r.detections["classes"]) for r in ov_results}
+    for r in dn_results:
+        got = detection.detections_to_list(
+            r.detections["boxes"], r.detections["scores"],
+            r.detections["classes"])
+        ref = list(host_sets[r.rid])
+        assert len(got) == len(ref) == r.detections["valid"], r.rid
+        for d in got:
+            for j, e in enumerate(ref):
+                iou = float(detection.iou_cxcywh(
+                    jnp.asarray(d["box_cxcywh"]),
+                    jnp.asarray(e["box_cxcywh"])))
+                if (d["class_id"] == e["class_id"] and iou > 0.9
+                        and abs(d["score"] - e["score"]) < 0.01):
+                    ref.pop(j)
+                    break
+            else:
+                raise AssertionError(
+                    f"device-NMS detection unmatched for rid {r.rid}: {d}")
+    reduction = (ov_summary["host_sync_bytes_per_sync"]
+                 / max(summary["host_sync_bytes_per_sync"], 1e-9))
+    assert reduction >= 10.0, \
+        f"device-NMS wire only {reduction:.1f}x smaller (need >= 10x)"
+
     if burst:
         assert summary["requests_dropped"] == 0, summary
         assert summary["requests_completed"] == n_req, summary
@@ -173,18 +211,29 @@ def run_detect(args) -> dict:
     print(rep.row())
     n_boxes = [len(detection.detections_to_list(
         r.detections["boxes"], r.detections["scores"],
-        r.detections["classes"])) for r in ov_results]
-    print(f"served {len(ov_results)} images in {summary['wall_s']:.2f}s "
-          f"({summary['img_per_s']:.2f} img/s overlap vs "
-          f"{ss_summary['img_per_s']:.2f} img/s single-shot, p50 tick "
-          f"{summary['tick_p50_ms']:.1f} ms); detections/img {n_boxes}")
+        r.detections["classes"])) for r in dn_results]
+    print(f"served {len(dn_results)} images in {summary['wall_s']:.2f}s "
+          f"({summary['img_per_s']:.2f} img/s device-NMS overlap vs "
+          f"{ov_summary['img_per_s']:.2f} raw-wire overlap vs "
+          f"{ss_summary['img_per_s']:.2f} single-shot, p50 tick "
+          f"{summary['tick_p50_ms']:.1f} ms); detections/img {n_boxes}; "
+          f"sync wire {summary['host_sync_bytes_per_sync']:.0f} B/dispatch "
+          f"vs {ov_summary['host_sync_bytes_per_sync']:.0f} raw "
+          f"({reduction:.1f}x smaller)")
     return {"reduced": args.reduced, "slots": args.slots,
             "burst": args.burst or None, "fuse_pool": args.fuse_pool,
             "pipelining": "double_buffered",
+            "nms": "device",
+            "emission_wire": "fp16 boxes+scores, int8 classes, int32 valid",
+            "sync_bytes_reduction_vs_raw_wire": reduction,
             "alignment": {"max_abs": rep.max_abs, "mean_abs": rep.mean_abs,
                           "within_1lsb": rep.within_1lsb},
             **summary,
+            "baseline_raw_wire": {"pipelining": "double_buffered",
+                                  "nms": "device_plus_raw_head_wire",
+                                  **ov_summary},
             "baseline_single_shot": {"pipelining": "single_shot",
+                                     "nms": "device_plus_raw_head_wire",
                                      **ss_summary}}
 
 
@@ -209,9 +258,34 @@ def main():
                     help="fused conv+maxpool Pallas kernel for pool layers")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--gate-bench", action="store_true",
+                    help="fail when host_sync_bytes_per_tick regresses >5%% "
+                         "above the committed record in --out")
     args = ap.parse_args()
 
+    committed = None
+    if args.gate_bench:
+        p = pathlib.Path(args.out)
+        if p.exists():
+            try:
+                committed = json.loads(p.read_text()).get(
+                    args.workload, {}).get("host_sync_bytes_per_tick")
+            except json.JSONDecodeError:
+                committed = None
+
     record = run_lm(args) if args.workload == "lm" else run_detect(args)
+
+    if args.gate_bench:
+        if committed is None:
+            print(f"[gate] no committed {args.workload} record in "
+                  f"{args.out} — gate records, next run enforces")
+        else:
+            got = record["host_sync_bytes_per_tick"]
+            assert got <= committed * 1.05, \
+                (f"host_sync_bytes_per_tick regressed: {got:.1f} > "
+                 f"committed {committed:.1f} x 1.05")
+            print(f"[gate] host_sync_bytes_per_tick {got:.1f} <= "
+                  f"committed {committed:.1f} x 1.05 OK")
     _write_bench(args.out, args.workload, record)
 
 

@@ -93,6 +93,23 @@ def postprocess(raw: jax.Array, *, iou_thresh: float = 0.45,
                                                        dec["scores"])
 
 
+def compact_detections(boxes: jax.Array, scores: jax.Array,
+                       classes: jax.Array):
+    """Static-shape NMS output for ONE image → the device-side emission wire.
+
+    (max_out, 4) f32 boxes, (max_out,) f32 scores, (max_out,) int32 class
+    ids → (fp16 boxes, fp16 scores, int8 classes, int32 valid-count).
+    Greedy NMS emits kept boxes in descending-score order, so the positive
+    slots are a prefix and one int32 prefix length stands in for a mask.
+    9 bytes/slot instead of 28 — and a backend shipping this instead of the
+    raw head drops the 4·G·G·75-byte tensor from every device→host sync.
+    fp16 is lossless for the set structure (the NMS ran in f32; only the
+    emitted values round: boxes in [0,1] to ~2⁻¹¹, scores to ~1e-3)."""
+    valid = jnp.sum((scores > 0).astype(jnp.int32))
+    return (boxes.astype(jnp.float16), scores.astype(jnp.float16),
+            classes.astype(jnp.int8), valid)
+
+
 def detections_to_list(boxes, scores, classes) -> list:
     """Static-shape NMS output for ONE image → host-side list of dicts
     (empty slots dropped) — the wire form of a detection ServeResult."""

@@ -19,9 +19,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fixedpoint as fxp
+from repro.core.qtensor import QTensor
 from repro.core.quant import (ACT_QMAX, binarize_ste, binarize_weight,
-                              lsq_fake_quant, lsq_grad_scale, quantize_act,
-                              round_half_away)
+                              lsq_fake_quant, lsq_grad_scale, quantize_act)
 from repro.kernels.w1a8_conv import ops as conv_ops
 from repro.kernels.w1a8_matmul import ops as mm_ops
 
@@ -174,20 +174,29 @@ def yolo_forward_float(params: dict, images: jax.Array, *,
     return x
 
 
-def calibrate_yolo(params: dict, images: jax.Array) -> dict:
+def calibrate_yolo(params: dict, images: jax.Array, *,
+                   per_channel: bool = True) -> dict:
     """Range-calibrate every activation quantizer (LSQ init, per channel).
 
     Runs the float datapath layer by layer, setting each act_step so the
     observed per-channel max maps to code 255 — the deployment-time
     equivalent of LSQ's learned steps for an untrained/just-initialized net.
+
+    ``per_channel=False`` calibrates one step per tensor (the scalar max,
+    broadcast over channels) — the uniform-Mul_prev regime the XNOR-popcount
+    accumulation path requires (and what the FPGA PE actually implements:
+    one fixed-point Mul_prev constant per layer ROM).
     """
     params = jax.tree_util.tree_map(lambda x: x, params)  # shallow copy
     x = images
     for spec in YOLO_LAYERS:
         p = params[spec.name]
         if spec.kind == "w1a8" or spec.name == "conv11":
-            cmax = jnp.max(jnp.abs(x), axis=(0, 1, 2))
+            axes = (0, 1, 2) if per_channel else None
+            cmax = jnp.max(jnp.abs(x), axis=axes)
             step = jnp.maximum(cmax / ACT_QMAX, 1e-4)
+            if not per_channel:
+                step = jnp.broadcast_to(step, (x.shape[-1],))
             p = dict(p)
             p["act_step"] = step.astype(jnp.float32)
             params[spec.name] = p
@@ -367,74 +376,93 @@ def deploy_yolo_kernel(params: dict) -> dict:
     return art
 
 
-def build_detector(key: jax.Array, calib_images: jax.Array) -> tuple:
+def build_detector(key: jax.Array, calib_images: jax.Array, *,
+                   per_channel: bool = True) -> tuple:
     """Init + range-calibrate + pack: the serving-deployment recipe.
 
     calib_images (B, 320, 320, 3) float in [0, 1]. Returns
     (calibrated float params, deploy_yolo_kernel artifact) — the float
     params stay the verification oracle for the packed path
-    (core.verify, DESIGN.md §10)."""
+    (core.verify, DESIGN.md §10). ``per_channel=False`` calibrates
+    per-tensor steps (required for ``yolo_forward_kernel(accum="popcount")``).
+    """
     params = init_yolo_params(key)
-    params = calibrate_yolo(params, calib_images)
+    params = calibrate_yolo(params, calib_images, per_channel=per_channel)
     return params, deploy_yolo_kernel(params)
 
 
 def yolo_forward_kernel(art: dict, images: jax.Array, *,
                         interpret: bool = True,
-                        fuse_pool: bool = False) -> jax.Array:
+                        fuse_pool: bool = False,
+                        accum: str = "dot") -> jax.Array:
     """Pallas streaming path. images (B,320,320,3) in [0,1] → (B,10,10,75) f32.
 
-    Inter-layer tensors are uint8 codes (requantized in each kernel's
-    epilogue) — HBM activation traffic is 1 byte/elem, the streaming analogue.
-    ``fuse_pool`` routes pooled W1A8 layers (conv2–4, conv7) through the
-    fused conv+requant+MaxPool kernel (§5.2 Post+MaxPool stage chain): the
-    pre-pool activation plane never exists in HBM. Bit-exact vs the unfused
-    path.
+    Inter-layer tensors are uint8-code QTensors (requantized in each
+    kernel's epilogue) — HBM activation traffic is 1 byte/elem, the
+    streaming analogue; the codes+step pair crosses every layer boundary
+    as one object. ``fuse_pool`` routes pooled W1A8 layers (conv2–4,
+    conv7) through the fused conv+requant+MaxPool kernel (§5.2
+    Post+MaxPool stage chain): the pre-pool activation plane never exists
+    in HBM. Bit-exact vs the unfused path. ``accum="popcount"`` contracts
+    every W1A8 layer in the binary domain (XNOR-popcount); it requires a
+    per-tensor-calibrated artifact (``build_detector(per_channel=False)``)
+    and is checked host-side here.
     """
     layers = art["layers"]
+    if accum == "popcount":
+        if fuse_pool:
+            raise ValueError("fuse_pool is a dot-path kernel; "
+                             "accum='popcount' requires fuse_pool=False")
+        for entry in layers[1:-1]:
+            steps = np.asarray(entry["step_in"])
+            if not np.all(steps == steps.reshape(-1)[0]):
+                raise ValueError(
+                    f"accum='popcount' needs uniform act steps; "
+                    f"{entry['spec'].name} is per-channel calibrated — "
+                    f"use build_detector(per_channel=False)")
     # conv1 (std, fixed-point-rounded weights) in f32, then quantize to codes.
     w1 = fxp.CONV1_W.roundtrip(layers[0]["w"])
     b1 = fxp.CONV1_B.roundtrip(layers[0]["b"])
     x = jax.nn.relu(_conv2d(images, w1) + b1)
     x = _maxpool2(x)
-    cur_steps = layers[0]["step_out"]                  # (16,) per-channel
-    codes = jnp.clip(round_half_away(x / cur_steps), 0,
-                     ACT_QMAX).astype(jnp.uint8)
+    qx = QTensor.quantize_u8(x, layers[0]["step_out"], axis=-1)
 
     for entry in layers[1:-1]:
         spec: ConvSpec = entry["spec"]
-        # Mul_prev = this layer's input steps; per-channel requant is folded
-        # into the epilogue: q = round(acc·(α/s_next) + b/s_next), out_step=1.
-        mul_prev = cur_steps
+        # Mul_prev = this layer's input steps (= qx.scale: the QTensor
+        # carries exactly the dequant context the next kernel fuses);
+        # per-channel requant is folded into the epilogue:
+        # q = round(acc·(α/s_next) + b/s_next), out_step=1.
+        mul_prev = qx.scale
         s_next = entry["step_out"]                     # (cout,) vector
         div_eff = entry["alpha"] / s_next
         b_eff = entry["b"] / s_next
         if spec.ksize == 3 and spec.pool and fuse_pool:
             codes = conv_ops.w1a8_conv3x3_pool(
-                codes, entry["w_packed"], mul_prev, div_eff, b_eff,
+                qx.data, entry["w_packed"], mul_prev, div_eff, b_eff,
                 cin=spec.cin, out_step=1.0, interpret=interpret)
-            cur_steps = s_next
+            qx = QTensor.from_codes(codes, s_next, axis=-1)
             continue
         if spec.ksize == 3:
             out = conv_ops.w1a8_conv3x3(
-                codes, entry["w_packed"], mul_prev, div_eff, b_eff,
-                cin=spec.cin, out_step=1.0, interpret=interpret)
+                qx.data, entry["w_packed"], mul_prev, div_eff, b_eff,
+                cin=spec.cin, out_step=1.0, accum=accum,
+                interpret=interpret)
         else:
-            b, h, w, _ = codes.shape
+            b, h, w, _ = qx.data.shape
             out = mm_ops.w1a8_matmul(
-                codes.reshape(b * h * w, spec.cin), entry["w_packed"],
+                qx.data.reshape(b * h * w, spec.cin), entry["w_packed"],
                 mul_prev, div_eff, b_eff, k=spec.cin,
-                out_step=1.0, interpret=interpret)
+                out_step=1.0, accum=accum, interpret=interpret)
             out = out.reshape(b, h, w, spec.cout)
-        codes = out
-        cur_steps = s_next
         if spec.pool:
-            codes = jax.lax.reduce_window(codes, jnp.uint8(0), jax.lax.max,
-                                          (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+            out = jax.lax.reduce_window(out, jnp.uint8(0), jax.lax.max,
+                                        (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        qx = QTensor.from_codes(out, s_next, axis=-1)
 
     # conv11 detection head (std 1×1, fixed-point weights) on dequant codes.
     last = layers[-1]
-    xq = codes.astype(jnp.float32) * cur_steps
+    xq = qx.dequantize()
     w11 = fxp.CONV11_W.roundtrip(last["w"])
     b11 = fxp.CONV11_B.roundtrip(last["b"])
     return _conv2d(xq, w11) + b11

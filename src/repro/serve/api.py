@@ -162,6 +162,11 @@ class EngineMetrics:
                                     if self.ticks else 0.0),
             "host_sync_bytes_per_tick": (self.host_sync_bytes / self.ticks
                                          if self.ticks else 0.0),
+            # per-sync payload width: comparable across overlap on/off and
+            # across tick counts (drain ticks sync nothing)
+            "host_sync_bytes_per_sync": (self.host_sync_bytes
+                                         / self.host_syncs
+                                         if self.host_syncs else 0.0),
             "queue_depth_max": (max(self.queue_depth)
                                 if self.queue_depth else 0),
             "queue_depth_mean": (float(np.mean(self.queue_depth))

@@ -186,8 +186,20 @@ def check_pipeline_train():
         rel = max(_tree_rel_err(gws, ref[1]), _tree_rel_err(gtop, ref[2]))
         assert abs(float(loss) - float(ref[0])) < 1e-5, (wire, loss)
         assert rel < tol, f"pipeline train dp ({wire}): rel err {rel}"
+
+    # int8 activation/cotangent wire on the stage-boundary permutes
+    for sched in ("1f1b", "gpipe"):
+        f = pipeline_train_step(stage_fn, loss_fn, mesh=mesh, axis="stage",
+                                num_micro=num_micro, dp_axis="data",
+                                schedule=sched, act_wire="int8")
+        with mesh:
+            loss, gws, gtop, _ = f(ws, x, aux=aux, top=top)
+        rel = max(_tree_rel_err(gws, ref[1]), _tree_rel_err(gtop, ref[2]))
+        assert abs(float(loss) - float(ref[0])) / abs(float(ref[0])) < 0.02, \
+            (sched, loss)
+        assert rel < 0.05, f"pipeline train act_wire ({sched}): rel err {rel}"
     print("7. 1F1B/GPipe pipelined training ≡ jax.grad oracle OK "
-          "(int8-wire DP grads in envelope)")
+          "(int8-wire DP grads + int8 stage-permute acts in envelope)")
 
 
 def check_pipeline_lm_train_step():

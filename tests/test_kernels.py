@@ -169,6 +169,91 @@ def test_requant_epilogue_rounding_matches_ref_across_zero(make_case):
         f"epilogue rounding drifted from ref ({np.abs(q_ker - q_ref).max()} LSB)"
 
 
+@pytest.mark.parametrize("m,k,n", MM_SHAPES)
+@pytest.mark.parametrize("out_step", [None, "auto"])
+def test_w1a8_matmul_popcount_bit_exact_vs_dot(m, k, n, out_step):
+    """XNOR-popcount accumulation vs the unpack-dot path, bit for bit, on
+    every existing matmul test shape. Canonical operands (mul ≡ 1 folded
+    into div) keep the dot path's bf16 operands exactly-representable
+    integers, so both paths compute the same integer Σ s·a and run the
+    same f32 epilogue — any deviation is a popcount bug, not noise."""
+    a, wp, _, div, b = _mm_case(m, k, n, seed=m + 2 * k + 3 * n)
+    m0 = 0.013
+    mul = jnp.full((k,), m0, jnp.float32)
+    ones = jnp.ones((k,), jnp.float32)
+    if out_step == "auto":
+        y = mm_ref.w1a8_matmul_ref(a, wp, k, mul, div, b)
+        out_step = float(jnp.max(jnp.abs(y))) / 255.0
+    y_pc = mm_ops.w1a8_matmul(a, wp, mul, div, b, k=k, out_step=out_step,
+                              accum="popcount", interpret=True)
+    y_dot = mm_ops.w1a8_matmul(a, wp, ones, div * m0, b, k=k,
+                               out_step=out_step, accum="dot", interpret=True)
+    assert np.array_equal(np.asarray(y_pc), np.asarray(y_dot))
+    # vs the jnp oracle: identical math, but XLA may contract the epilogue's
+    # mul+add into an FMA differently outside Pallas — allow 1 ulp / 1 LSB.
+    y_ref = mm_ref.w1a8_matmul_ref(
+        a, wp, k, ones, div * m0, b,
+        None if out_step is None else jnp.float32(out_step))
+    diff = np.abs(np.asarray(y_pc, np.float64) - np.asarray(y_ref, np.float64))
+    if out_step is None:
+        assert diff.max() <= 4e-6 * (np.abs(np.asarray(y_ref)).max() + 1)
+    else:
+        assert diff.max() <= 1
+
+
+@pytest.mark.parametrize("b,h,w,cin,cout", CONV_SHAPES)
+@pytest.mark.parametrize("out_step", [None, "auto"])
+def test_w1a8_conv_popcount_bit_exact_vs_dot(b, h, w, cin, cout, out_step):
+    """Conv analogue of the popcount bit-exactness sweep, incl. the K9p
+    padding lanes (9·Cin not a multiple of 32 for most shapes)."""
+    kw, ka, km = jax.random.split(jax.random.PRNGKey(b * 7 + cin), 3)
+    wgt = jax.random.normal(kw, (3, 3, cin, cout))
+    wp = conv_ops.conv_pack_weights(wgt)
+    a = jax.random.randint(ka, (b, h, w, cin), 0, 256,
+                           jnp.int32).astype(jnp.uint8)
+    m0 = 0.05
+    mul = jnp.full((cin,), m0, jnp.float32)
+    ones = jnp.ones((cin,), jnp.float32)
+    div = jax.random.uniform(km, (cout,), jnp.float32, 0.5, 1.5)
+    bias = jax.random.normal(km, (cout,), jnp.float32)
+    if out_step == "auto":
+        y = conv_ref.w1a8_conv3x3_ref(a, wp, cin, mul, div, bias)
+        out_step = float(jnp.max(jnp.abs(y))) / 255.0
+    y_pc = conv_ops.w1a8_conv3x3(a, wp, mul, div, bias, cin=cin,
+                                 out_step=out_step, accum="popcount",
+                                 interpret=True)
+    y_dot = conv_ops.w1a8_conv3x3(a, wp, ones, div * m0, bias, cin=cin,
+                                  out_step=out_step, accum="dot",
+                                  interpret=True)
+    assert np.array_equal(np.asarray(y_pc), np.asarray(y_dot))
+    # 1-ulp FMA slack vs the jnp oracle (see matmul variant for rationale)
+    y_ref = conv_ref.w1a8_conv3x3_ref(
+        a, wp, cin, ones, div * m0, bias,
+        None if out_step is None else jnp.float32(out_step))
+    diff = np.abs(np.asarray(y_pc, np.float64) - np.asarray(y_ref, np.float64))
+    if out_step is None:
+        assert diff.max() <= 4e-6 * (np.abs(np.asarray(y_ref)).max() + 1)
+    else:
+        assert diff.max() <= 1
+
+
+def test_popcount_recovers_exact_integer_accumulation():
+    """Neutral epilogue (div ≡ 1, bias ≡ 0, mul ≡ 1): the popcount path's
+    output IS the integer Σ_k s_k·a_k — the binary-domain contraction is
+    exact, not an approximation (where the dot path's bf16 prologue rounds
+    as soon as mul ≠ 1)."""
+    m, k, n = 32, 96, 64
+    a, wp, *_ = _mm_case(m, k, n, seed=99)
+    ones_k = jnp.ones((k,), jnp.float32)
+    ones_n = jnp.ones((n,), jnp.float32)
+    zeros_n = jnp.zeros((n,), jnp.float32)
+    signs = packing.unpack_signs(wp, k, axis=0, dtype=jnp.int32)
+    want = np.asarray(a, np.int64) @ np.asarray(signs, np.int64)
+    got = mm_ops.w1a8_matmul(a, wp, ones_k, ones_n, zeros_n, k=k,
+                             accum="popcount", interpret=True)
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+
+
 def test_packing_roundtrip_axes():
     for axis, shape in [(0, (70, 12)), (1, (12, 70)), (0, (32, 5)), (0, (33, 4))]:
         w = jax.random.normal(jax.random.PRNGKey(axis + shape[0]), shape)

@@ -176,6 +176,35 @@ def test_scheduler_trace_fifo_within_deadline_no_slot_leak(data):
     assert_trace_ok(capacity, admit_width, trace, max_queue)
 
 
+@settings(deadline=None, max_examples=25)
+@given(hnp.arrays(np.float32, (4, 6),
+                  elements=st.floats(-4, 4, width=32, allow_subnormal=False)),
+       st.sampled_from([1e-6, 1e-3, 1.0, 1e3, 1e6]),
+       st.booleans())
+def test_int8_wire_permute_roundtrip_within_envelope(x, mag, flip):
+    """The pipeline stage wire: quantize → ppermute(int8 codes + f32 scale)
+    → dequantize round-trips within the documented envelope |x̂ − x| ≤
+    max|x|/254 per element per hop (collectives.permute_quantized), across
+    magnitudes and sign mixes including rows that straddle zero; devices
+    outside the permutation dequantize to exactly 0 (the f32-ppermute
+    boundary semantics the 1F1B schedule relies on)."""
+    from repro.dist.collectives import permute_quantized
+    if len(jax.devices()) < 4:
+        pytest.skip("needs >= 4 host devices (see conftest.py)")
+    x = x * np.float32(mag) * (np.float32(-1.0) if flip else np.float32(1.0))
+    mesh = jax.make_mesh((4,), ("d",))
+    spec = jax.sharding.PartitionSpec("d")
+    shift = [(i, i + 1) for i in range(3)]        # ring edge stays dark
+    fn = jax.jit(jax.shard_map(lambda s: permute_quantized(s, "d", shift),
+                               mesh=mesh, in_specs=spec, out_specs=spec))
+    out = np.asarray(fn(jnp.asarray(x)))
+    np.testing.assert_array_equal(out[0], 0.0)    # boundary device: exact 0
+    for row in range(3):                          # device row → row+1
+        envelope = np.abs(x[row]).max() / 254 + 1e-30
+        err = np.abs(out[row + 1] - x[row]).max()
+        assert err <= envelope * (1 + 1e-6), (row, err, envelope)
+
+
 @settings(deadline=None, max_examples=8)
 @given(st.integers(2, 12), st.integers(0, 50))
 def test_nms_kept_boxes_are_mutually_distant(n, seed):

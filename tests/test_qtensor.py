@@ -1,0 +1,74 @@
+"""QTensor: the one quantized codes+scale pytree every boundary speaks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.qtensor import QTensor, S8_QMAX
+
+
+def test_u8_roundtrip_within_half_step():
+    x = jnp.linspace(0.0, 5.0, 257)
+    qt = QTensor.quantize_u8(x, jnp.float32(5.0 / 255))
+    assert qt.data.dtype == jnp.uint8
+    err = jnp.abs(qt.dequantize() - x)
+    assert float(jnp.max(err)) <= 0.5 * 5.0 / 255 + 1e-6
+
+
+def test_s8_roundtrip_symmetric_straddles_zero():
+    x = jnp.asarray([-3.0, -1e-4, 0.0, 1e-4, 2.9999, 3.0])
+    qt = QTensor.quantize_s8(x)
+    assert qt.data.dtype == jnp.int8
+    assert int(qt.data[0]) == -S8_QMAX and int(qt.data[-1]) == S8_QMAX
+    err = jnp.abs(qt.dequantize() - x)
+    assert float(jnp.max(err)) <= 0.5 * 3.0 / S8_QMAX + 1e-7
+
+
+def test_s8_explicit_shared_scale_respected():
+    x = jnp.asarray([0.5, -0.25])
+    qt = QTensor.quantize_s8(x, scale=jnp.float32(1.0 / S8_QMAX))
+    np.testing.assert_array_equal(np.asarray(qt.data), [64, -32])
+
+
+def test_b1_pack_dequantize_matches_signs():
+    w = jax.random.normal(jax.random.PRNGKey(0), (70, 12))
+    alpha = jnp.mean(jnp.abs(w), axis=0)
+    qt = QTensor.pack_b1(w, alpha, axis=0)
+    assert qt.data.dtype == jnp.uint32 and qt.kdim == 70
+    want = np.where(np.asarray(w) >= 0, 1.0, -1.0) * np.asarray(alpha)
+    np.testing.assert_allclose(np.asarray(qt.dequantize()), want, rtol=1e-6)
+
+
+def test_pytree_roundtrip_and_jit_boundary():
+    qt = QTensor.quantize_u8(jnp.arange(8.0), jnp.float32(0.05))
+    leaves, treedef = jax.tree_util.tree_flatten(qt)
+    assert len(leaves) == 2                      # data + scale trace/permute
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert back.qtype == "u8"
+
+    @jax.jit
+    def deq(q):
+        return q.dequantize()
+
+    np.testing.assert_allclose(np.asarray(deq(qt)),
+                               np.asarray(qt.dequantize()))
+
+
+def test_distinct_qtypes_have_distinct_treedefs():
+    a = QTensor(jnp.zeros(4, jnp.int8), jnp.float32(1.0), "s8")
+    b = QTensor(jnp.zeros(4, jnp.uint8), jnp.float32(1.0), "u8")
+    ta = jax.tree_util.tree_structure(a)
+    tb = jax.tree_util.tree_structure(b)
+    assert ta != tb                              # wire format is structural
+
+
+def test_wire_bytes_counts_payload_plus_scale():
+    qt = QTensor.quantize_s8(jnp.ones((4, 8)))
+    assert qt.wire_bytes() == 4 * 8 * 1 + 4      # int8 payload + f32 scale
+    f = QTensor.from_f32(jnp.ones((4, 8)))
+    assert f.wire_bytes() == 4 * 8 * 4 + 4
+
+
+def test_unknown_qtype_rejected():
+    with pytest.raises(ValueError, match="qtype"):
+        QTensor(jnp.zeros(1), jnp.float32(1.0), "fp4")

@@ -85,6 +85,34 @@ def test_kernel_path_alignment(calibrated):
     assert rep.max_abs < 0.02 and rep.within_1lsb == 1.0
 
 
+def test_kernel_path_popcount_alignment(calibrated):
+    """Binary-domain (XNOR-popcount) serving forward on a per-tensor
+    calibrated artifact: within the same §6.3 envelope vs the float oracle,
+    and within the dot path's own bf16 prologue noise of the dot path
+    (popcount is the exact one — the only difference IS that noise)."""
+    params, _, img = calibrated
+    pt = yolo.calibrate_yolo(params, img, per_channel=False)
+    out_f = np.asarray(yolo.yolo_forward_float(pt, img, train=False),
+                       np.float64)
+    kart = yolo.deploy_yolo_kernel(pt)
+    out_pc = np.asarray(yolo.yolo_forward_kernel(
+        kart, img, interpret=True, accum="popcount"), np.float64)
+    rep = verify.compare("kernel_raw_popcount", out_pc, out_f, lsb=0.02)
+    assert rep.max_abs < 0.02 and rep.within_1lsb == 1.0
+    out_dot = np.asarray(yolo.yolo_forward_kernel(
+        kart, img, interpret=True, accum="dot"), np.float64)
+    assert np.abs(out_pc - out_dot).max() < 0.02
+
+
+def test_popcount_rejects_per_channel_artifact(calibrated):
+    params, _, img = calibrated
+    kart = yolo.deploy_yolo_kernel(params)       # per-channel calibrated
+    with pytest.raises(ValueError, match="uniform act steps"):
+        yolo.yolo_forward_kernel(kart, img, accum="popcount")
+    with pytest.raises(ValueError, match="fuse_pool"):
+        yolo.yolo_forward_kernel(kart, img, accum="popcount", fuse_pool=True)
+
+
 def test_int_pipeline_is_deterministic(calibrated):
     params, img_u8, _ = calibrated
     art = yolo.deploy_yolo(params)
