@@ -1,12 +1,14 @@
 """Fused W1A8 conv3x3 + requant + 2×2 MaxPool — the paper's Post+MaxPool
 pipeline stage (§5.2, Table 1 layers conv1–4, conv7) as one Pallas kernel.
 
-Grid over (batch, pooled output rows): each step stages FOUR input
-row-stripes (two conv rows' line buffers, halo included), computes both conv
-rows, applies the Mul_prev/Div/bias/round/clip epilogue, and max-reduces
-2×2 windows — the pooled uint8 row goes to HBM. Activation traffic for a
-pool layer drops from (write HW + read HW + write HW/4) to (write HW/4):
-the conv output never exists in HBM, exactly like the RTL stage chain.
+Grid over (batch, pooled output row blocks): each step stages
+``2·rows + 2`` input row-stripes (the line buffers for ``2·rows`` conv
+rows, halo included), computes all conv rows with one MXU dot over a
+(2·rows·W, K9p) im2col block, applies the Mul_prev/Div/bias/round/clip
+epilogue, and max-reduces 2×2 windows — ``rows`` pooled uint8 rows go to
+HBM per step. Activation traffic for a pool layer drops from
+(write HW + read HW + write HW/4) to (write HW/4): the conv output never
+exists in HBM, exactly like the RTL stage chain.
 """
 from __future__ import annotations
 
@@ -21,42 +23,38 @@ from repro import compat  # noqa: F401  (pltpu.CompilerParams on older jax)
 from repro.core.packing import PACK
 from repro.core.quant import requant_epilogue
 from repro.kernels.w1a8_matmul.kernel import _unpack_tile
+from repro.kernels.w1a8_conv.kernel import _im2col_rows
 
 
-def _kernel(r0_ref, r1_ref, r2_ref, r3_ref, wp_ref, m_ref, d_ref, b_ref,
-            o_ref, *, w_out: int, k9p: int, cout: int, out_step: float,
-            compute_dtype):
-    rows = [r0_ref[0, 0], r1_ref[0, 0], r2_ref[0, 0], r3_ref[0, 0]]
+def _kernel(*refs, rows: int, w_out: int, k9p: int, cout: int,
+            out_step: float, compute_dtype):
+    nconv = 2 * rows
+    line_rows = [r[0, 0] for r in refs[:nconv + 2]]
+    wp_ref, m_ref, d_ref, b_ref, o_ref = refs[nconv + 2:]
     signs = _unpack_tile(wp_ref[...], k9p, cout, compute_dtype)
-    m = m_ref[...].astype(jnp.float32)
-    div = d_ref[...].astype(jnp.float32)
-    bias = b_ref[...].astype(jnp.float32)
-
-    def conv_row(top):                              # 3 stacked line buffers
-        cols = jnp.concatenate(
-            [rows[top + dy][dx:dx + w_out, :] for dy in range(3)
-             for dx in range(3)], axis=-1).astype(jnp.float32)
-        if cols.shape[1] < k9p:
-            cols = jnp.pad(cols, ((0, 0), (0, k9p - cols.shape[1])))
-        am = (cols * m).astype(compute_dtype)
-        y = jnp.dot(am, signs, preferred_element_type=jnp.float32)
-        y = y * div + bias
-        # f32 carrier for the 2×2 max; values are exact uint8 codes
-        return requant_epilogue(y, out_step, jnp.float32)    # (W, Cout)
-
-    y0 = conv_row(0)
-    y1 = conv_row(1)
-    both = jnp.maximum(y0, y1)                       # vertical 2-max
-    pooled = jnp.maximum(both[0::2, :], both[1::2, :])  # horizontal 2-max
-    o_ref[0, 0] = pooled.astype(o_ref.dtype)
+    cols = _im2col_rows(line_rows, nconv, w_out, k9p, jnp.float32)
+    am = (cols * m_ref[...].astype(jnp.float32)).astype(compute_dtype)
+    y = jnp.dot(am, signs, preferred_element_type=jnp.float32)
+    y = (y * d_ref[...].astype(jnp.float32)
+         + b_ref[...].astype(jnp.float32))
+    # f32 carrier for the 2×2 max; values are exact uint8 codes
+    y = requant_epilogue(y, out_step, jnp.float32)
+    y = y.reshape(nconv, w_out, cout)
+    both = jnp.maximum(y[0::2], y[1::2])                # vertical 2-max
+    pooled = jnp.maximum(both[:, 0::2, :], both[:, 1::2, :])  # horizontal
+    o_ref[0] = pooled.astype(o_ref.dtype)
 
 
 def w1a8_conv3x3_pool2(a_u8: jax.Array, w_packed: jax.Array,
                        mul_prev: jax.Array, div_post: jax.Array,
                        bias: jax.Array, *, cin: int, out_step: float,
-                       compute_dtype=jnp.bfloat16,
+                       rows: int = 1, compute_dtype=jnp.bfloat16,
                        interpret: bool = True) -> jax.Array:
-    """a_u8 (B,H,W,Cin) uint8 (H,W even) → (B,H/2,W/2,Cout) uint8 codes."""
+    """a_u8 (B,H,W,Cin) uint8 (H,W even) → (B,H/2,W/2,Cout) uint8 codes.
+
+    ``rows`` pooled rows per grid step ((H/2) % rows == 0); bit-exact
+    across rows choices — per-conv-row dot operands are unchanged.
+    """
     from repro.kernels.w1a8_conv.ops import conv_mul9
     b, h, w, _ = a_u8.shape
     a_pad = jnp.pad(a_u8, ((0, 0), (1, 1), (1, 1), (0, 0)))
@@ -66,26 +64,30 @@ def w1a8_conv3x3_pool2(a_u8: jax.Array, w_packed: jax.Array,
     if wp.shape[0] != k9p // PACK:
         wp = jnp.pad(wp, ((0, k9p // PACK - wp.shape[0]), (0, 0)))
     cout = wp.shape[1]
-    wp_, hp = w + 2, h + 2
-    kernel = functools.partial(_kernel, w_out=w, k9p=k9p, cout=cout,
-                               out_step=out_step, compute_dtype=compute_dtype)
+    wp_ = w + 2
+    assert (h // 2) % rows == 0, (h, rows)
+    kernel = functools.partial(_kernel, rows=rows, w_out=w, k9p=k9p,
+                               cout=cout, out_step=out_step,
+                               compute_dtype=compute_dtype)
     def row(dy):
-        return pl.BlockSpec((1, 1, wp_, cin),
-                            lambda bb, i, dy=dy: (bb, 2 * i + dy, 0, 0))
+        return pl.BlockSpec(
+            (1, 1, wp_, cin),
+            lambda bb, i, dy=dy: (bb, 2 * rows * i + dy, 0, 0))
+    nconv = 2 * rows
     return pl.pallas_call(
         kernel,
-        grid=(b, h // 2),
-        in_specs=[row(0), row(1), row(2), row(3),
-                  pl.BlockSpec((k9p // PACK, cout), lambda bb, i: (0, 0)),
-                  pl.BlockSpec((1, k9p), lambda bb, i: (0, 0)),
-                  pl.BlockSpec((1, cout), lambda bb, i: (0, 0)),
-                  pl.BlockSpec((1, cout), lambda bb, i: (0, 0))],
-        out_specs=pl.BlockSpec((1, 1, w // 2, cout),
+        grid=(b, (h // 2) // rows),
+        in_specs=[row(dy) for dy in range(nconv + 2)] + [
+            pl.BlockSpec((k9p // PACK, cout), lambda bb, i: (0, 0)),
+            pl.BlockSpec((1, k9p), lambda bb, i: (0, 0)),
+            pl.BlockSpec((1, cout), lambda bb, i: (0, 0)),
+            pl.BlockSpec((1, cout), lambda bb, i: (0, 0))],
+        out_specs=pl.BlockSpec((1, rows, w // 2, cout),
                                lambda bb, i: (bb, i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h // 2, w // 2, cout), jnp.uint8),
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(a_pad, a_pad, a_pad, a_pad, wp, mul9,
+    )(*((a_pad,) * (nconv + 2)), wp, mul9,
       div_post.astype(jnp.float32).reshape(1, cout),
       bias.astype(jnp.float32).reshape(1, cout))

@@ -4,9 +4,13 @@
 `w1a8_conv3x3_pool` — the same conv with the 2×2 MaxPool fused into the
 epilogue (the paper's §5.2 Post+MaxPool stage chain): the conv output never
 round-trips through HBM, which is what lets the streaming serving path
-(`serve.backends.DetectionBackend(fuse_pool=True)`) emit pooled uint8 rows
-directly. Bit-exact vs conv-then-reduce_window (same per-row dot shapes,
-same rounding, max commutes with the uint8 cast).
+(`serve.backends.DetectionBackend`) emit pooled uint8 rows directly.
+Bit-exact vs conv-then-reduce_window (same per-row dot shapes, same
+rounding, max commutes with the uint8 cast).
+
+Launch configuration (accum mode, row blocking, interpret, fused-vs-split
+pool routing) comes from a `KernelConfig` (``config=``); the old per-call
+kwargs survive one release behind a DeprecationWarning.
 """
 from __future__ import annotations
 
@@ -17,6 +21,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.packing import PACK, pack_signs
+from repro.kernels import config as _cfg
+from repro.kernels.config import KernelConfig, _UNSET
 from repro.kernels.w1a8_conv import kernel as _k
 from repro.kernels.w1a8_conv import ref as _ref
 
@@ -35,20 +41,19 @@ def conv_mul9(mul_prev: jax.Array) -> jax.Array:
     return jnp.pad(m9, (0, k9p - k9)).reshape(1, k9p)
 
 
-@functools.partial(jax.jit, static_argnames=("cin", "out_step", "accum",
-                                             "interpret", "use_kernel"))
 def w1a8_conv3x3(a_u8: jax.Array, w_packed: jax.Array, mul_prev: jax.Array,
                  div_post: jax.Array, bias: jax.Array, *, cin: int,
-                 out_step: Optional[float] = None, accum: str = "dot",
-                 interpret: bool = True,
-                 use_kernel: bool = True) -> jax.Array:
+                 config: Optional[KernelConfig] = None,
+                 out_step=_UNSET, accum=_UNSET, interpret=_UNSET,
+                 use_kernel=_UNSET) -> jax.Array:
     """Streaming 3×3 SAME conv on uint8 codes.
 
     a_u8 (B,H,W,Cin); w_packed (ceil(9Cin/32),Cout); mul_prev (Cin,);
-    div_post/bias (Cout,). Returns (B,H,W,Cout) f32, or uint8 if out_step.
+    div_post/bias (Cout,). Returns (B,H,W,Cout) f32, or uint8 if
+    config.out_step is set.
 
-    accum="popcount" contracts in the binary domain (XNOR-popcount instead
-    of unpack-then-dot). That path cannot apply a per-input-channel
+    config.accum="popcount" contracts in the binary domain (XNOR-popcount
+    instead of unpack-then-dot). That path cannot apply a per-input-channel
     Mul_prev inside the accumulation, so it requires a *uniform* mul_prev
     (per-tensor step) whose scalar is folded into Div_current here:
     ``S·(div·m) + bias`` — the exact same f32 epilogue expression as the
@@ -56,7 +61,18 @@ def w1a8_conv3x3(a_u8: jax.Array, w_packed: jax.Array, mul_prev: jax.Array,
     Non-uniform mul_prev silently uses only ``mul_prev[0]``; callers with
     concrete scales (``models/yolo.py``) assert uniformity host-side.
     """
-    if not use_kernel:
+    cfg = _cfg.normalize("conv3x3", config, out_step=out_step, accum=accum,
+                         interpret=interpret, use_kernel=use_kernel)
+    cfg = cfg.replace(interpret=cfg.resolved_interpret())
+    return _w1a8_conv3x3(a_u8, w_packed, mul_prev, div_post, bias,
+                         cin=cin, config=cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cin", "config"))
+def _w1a8_conv3x3(a_u8, w_packed, mul_prev, div_post, bias, *, cin: int,
+                  config: KernelConfig) -> jax.Array:
+    out_step = config.out_step
+    if not config.use_kernel:
         return _ref.w1a8_conv3x3_ref(
             a_u8, w_packed, cin, mul_prev, div_post, bias,
             None if out_step is None else jnp.float32(out_step))
@@ -68,32 +84,62 @@ def w1a8_conv3x3(a_u8: jax.Array, w_packed: jax.Array, mul_prev: jax.Array,
         wp = jnp.pad(wp, ((0, k9p // PACK - wp.shape[0]), (0, 0)))
     cout = wp.shape[1]
     dv = div_post.astype(jnp.float32).reshape(1, cout)
-    if accum == "popcount":
+    if config.accum == "popcount":
         dv = dv * mul_prev.astype(jnp.float32).reshape(-1)[0]
     return _k.w1a8_conv3x3_pallas(
         a_pad, wp, mul9, dv,
         bias.astype(jnp.float32).reshape(1, cout),
-        out_step=out_step, accum=accum, interpret=interpret)
+        out_step=out_step, accum=config.accum,
+        rows=config.conv_rows(a_u8.shape[1]),
+        interpret=config.interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("cin", "out_step", "interpret",
-                                             "use_kernel"))
 def w1a8_conv3x3_pool(a_u8: jax.Array, w_packed: jax.Array,
                       mul_prev: jax.Array, div_post: jax.Array,
-                      bias: jax.Array, *, cin: int, out_step: float = 1.0,
-                      interpret: bool = True,
-                      use_kernel: bool = True) -> jax.Array:
-    """Streaming 3×3 SAME conv + requant + 2×2 MaxPool in one kernel.
+                      bias: jax.Array, *, cin: int,
+                      config: Optional[KernelConfig] = None,
+                      out_step=_UNSET, interpret=_UNSET,
+                      use_kernel=_UNSET) -> jax.Array:
+    """Streaming 3×3 SAME conv + requant + 2×2 MaxPool.
 
     Same contract as `w1a8_conv3x3` with a quantizing epilogue, but H and W
     must be even and the output is the pooled (B, H/2, W/2, Cout) uint8
-    code plane (`fused_pool.w1a8_conv3x3_pool2`).
+    code plane. config.fused=True (default) runs the single fused kernel
+    (`fused_pool.w1a8_conv3x3_pool2` — dot-only); config.fused=False runs
+    the conv kernel then `reduce_window`, which is the route that admits
+    config.accum="popcount" through a pool layer. Both routes are bit-exact
+    (max commutes with the uint8 cast).
     """
-    if not use_kernel:
+    cfg = _cfg.normalize("conv3x3_pool", config, out_step=out_step,
+                         interpret=interpret, use_kernel=use_kernel)
+    cfg = cfg.replace(interpret=cfg.resolved_interpret())
+    if cfg.out_step is None:
+        cfg = cfg.replace(out_step=1.0)
+    if cfg.fused and cfg.accum == "popcount" and cfg.use_kernel:
+        raise ValueError(
+            "fuse_pool is a dot-path kernel: the fused conv+pool kernel has "
+            "no popcount datapath — use KernelConfig(fused=False) to route "
+            "popcount through conv-then-pool")
+    return _w1a8_conv3x3_pool(a_u8, w_packed, mul_prev, div_post, bias,
+                              cin=cin, config=cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cin", "config"))
+def _w1a8_conv3x3_pool(a_u8, w_packed, mul_prev, div_post, bias, *,
+                       cin: int, config: KernelConfig) -> jax.Array:
+    out_step = config.out_step
+    if not config.use_kernel:
         out = _ref.w1a8_conv3x3_ref(a_u8, w_packed, cin, mul_prev, div_post,
                                     bias, jnp.float32(out_step))
         return jax.lax.reduce_window(out, jnp.uint8(0), jax.lax.max,
                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    if not config.fused:
+        out = _w1a8_conv3x3(a_u8, w_packed, mul_prev, div_post, bias,
+                            cin=cin, config=config.replace(op="conv3x3"))
+        return jax.lax.reduce_window(out, jnp.uint8(0), jax.lax.max,
+                                     (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
     from repro.kernels.w1a8_conv.fused_pool import w1a8_conv3x3_pool2
     return w1a8_conv3x3_pool2(a_u8, w_packed, mul_prev, div_post, bias,
-                              cin=cin, out_step=out_step, interpret=interpret)
+                              cin=cin, out_step=out_step,
+                              rows=config.conv_rows(a_u8.shape[1] // 2),
+                              interpret=config.interpret)

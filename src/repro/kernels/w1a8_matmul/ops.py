@@ -2,7 +2,8 @@
 
 Handles batching (leading dims folded into M), padding to tile multiples
 (zero activations × zero mul_prev ⇒ padded K contributes exactly 0), tile
-auto-shrink for small operands, and CPU fallback (interpret mode / jnp ref).
+resolution through `KernelConfig` (explicit bm/bk/bn or the heuristic
+auto-shrink), and CPU fallback (interpret mode / jnp ref).
 """
 from __future__ import annotations
 
@@ -13,37 +14,41 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.packing import PACK, pack_signs
+from repro.kernels import config as _cfg
+from repro.kernels.config import KernelConfig, _UNSET, _round_up
 from repro.kernels.w1a8_matmul import kernel as _k
 from repro.kernels.w1a8_matmul import ref as _ref
 
 
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
-
-
-def _pick(dim: int, pref: int, mult: int) -> int:
-    """Largest tile ≤ pref that keeps padding small; multiple of `mult`."""
-    if dim >= pref:
-        return pref
-    return max(mult, _round_up(dim, mult))
-
-
-@functools.partial(jax.jit, static_argnames=("k", "out_step", "accum",
-                                             "interpret", "use_kernel"))
 def w1a8_matmul(a_u8: jax.Array, w_packed: jax.Array, mul_prev: jax.Array,
                 div_post: jax.Array, bias: jax.Array, *, k: int,
-                out_step: Optional[float] = None, accum: str = "dot",
-                interpret: bool = True, use_kernel: bool = True) -> jax.Array:
+                config: Optional[KernelConfig] = None,
+                out_step=_UNSET, accum=_UNSET, interpret=_UNSET,
+                use_kernel=_UNSET) -> jax.Array:
     """y = ((a ⊙ mul_prev) @ unpack(w_packed)) ⊙ div_post + bias  [+ requant].
 
     a_u8: (..., K) uint8 codes; w_packed: (ceil(K/32), N) uint32;
     mul_prev: (K,) f32; div_post, bias: (N,) f32.
 
-    accum="popcount": XNOR-popcount contraction (uniform-Mul_prev
-    contract; the scalar ``mul_prev[0]`` is folded into div_post so the
-    epilogue — and the rounding — matches the dot path bit for bit).
+    Launch configuration comes from ``config=`` (a `KernelConfig`, op
+    "matmul"); the old per-call kwargs survive one release behind a
+    DeprecationWarning. config.accum="popcount": XNOR-popcount contraction
+    (uniform-Mul_prev contract; the scalar ``mul_prev[0]`` is folded into
+    div_post so the epilogue — and the rounding — matches the dot path bit
+    for bit).
     """
-    if not use_kernel:
+    cfg = _cfg.normalize("matmul", config, out_step=out_step, accum=accum,
+                         interpret=interpret, use_kernel=use_kernel)
+    cfg = cfg.replace(interpret=cfg.resolved_interpret())
+    return _w1a8_matmul(a_u8, w_packed, mul_prev, div_post, bias,
+                        k=k, config=cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "config"))
+def _w1a8_matmul(a_u8, w_packed, mul_prev, div_post, bias, *, k: int,
+                 config: KernelConfig) -> jax.Array:
+    out_step = config.out_step
+    if not config.use_kernel:
         y = _ref.w1a8_matmul_ref(a_u8, w_packed, k, mul_prev, div_post, bias,
                                  None if out_step is None else jnp.float32(out_step))
         return y
@@ -55,9 +60,7 @@ def w1a8_matmul(a_u8: jax.Array, w_packed: jax.Array, mul_prev: jax.Array,
     n = w_packed.shape[1]
     a2 = a_u8.reshape(m, a_u8.shape[-1])
 
-    bm = _pick(m, 256, 8)
-    bn = _pick(n, 256, 128)
-    bk = _pick(k, 512, PACK)
+    bm, bk, bn = config.matmul_tiles(m, k, n)
     mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
 
     a2 = jnp.pad(a2[:, :k], ((0, mp - m), (0, kp - k)))
@@ -68,16 +71,17 @@ def w1a8_matmul(a_u8: jax.Array, w_packed: jax.Array, mul_prev: jax.Array,
     dv = jnp.pad(div_post.astype(jnp.float32), (0, np_ - n)).reshape(1, np_)
     bs = jnp.pad(bias.astype(jnp.float32), (0, np_ - n)).reshape(1, np_)
 
-    if accum == "popcount":
+    if config.accum == "popcount":
         # zero-padded K lanes contribute 0 to popcount on their own —
         # no mul operand needed, its scalar folds into Div_current.
         dv = dv * mul_prev.astype(jnp.float32).reshape(-1)[0]
         y = _k.w1a8_matmul_popcount_pallas(a2, wp, dv, bs, out_step=out_step,
                                            bm=bm, bk=bk, bn=bn,
-                                           interpret=interpret)
+                                           interpret=config.interpret)
     else:
         y = _k.w1a8_matmul_pallas(a2, wp, mul, dv, bs, out_step=out_step,
-                                  bm=bm, bk=bk, bn=bn, interpret=interpret)
+                                  bm=bm, bk=bk, bn=bn,
+                                  interpret=config.interpret)
     return y[:m, :n].reshape(lead + (n,))
 
 

@@ -142,11 +142,12 @@ def run_detect(args) -> dict:
                                     3), np.uint8)
     params, art = yolo.build_detector(
         jax.random.PRNGKey(args.seed),
-        jnp.asarray(imgs_u8[:1], jnp.float32) / 256.0)
+        jnp.asarray(imgs_u8[:1], jnp.float32) / 256.0,
+        profile=args.profile)
 
     def serve(overlap: bool, device_nms: bool = False):
         backend = DetectionBackend(art, slots=args.slots, overlap=overlap,
-                                   fuse_pool=args.fuse_pool,
+                                   profile=args.profile,
                                    device_nms=device_nms)
         backend.warmup()                  # compile outside the timed ticks
         sched = Scheduler(backend, max_queue=max(n_req, 1))
@@ -221,7 +222,7 @@ def run_detect(args) -> dict:
           f"vs {ov_summary['host_sync_bytes_per_sync']:.0f} raw "
           f"({reduction:.1f}x smaller)")
     return {"reduced": args.reduced, "slots": args.slots,
-            "burst": args.burst or None, "fuse_pool": args.fuse_pool,
+            "burst": args.burst or None, "profile": args.profile,
             "pipelining": "double_buffered",
             "nms": "device",
             "emission_wire": "fp16 boxes+scores, int8 classes, int32 valid",
@@ -254,8 +255,11 @@ def main():
     ap.add_argument("--burst", default="",
                     help="submit the whole stream as one burst, e.g. 4x = "
                          "4×slots requests (detect)")
-    ap.add_argument("--fuse-pool", action="store_true",
-                    help="fused conv+maxpool Pallas kernel for pool layers")
+    ap.add_argument("--profile", choices=("tuned", "default", "interpret"),
+                    default="tuned",
+                    help="kernel tuning profile for the detect backend "
+                         "(tuned = committed autotune table winners, incl. "
+                         "the fused conv+maxpool routing)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=DEFAULT_OUT)
     ap.add_argument("--gate-bench", action="store_true",

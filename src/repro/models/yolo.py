@@ -22,8 +22,12 @@ from repro.core import fixedpoint as fxp
 from repro.core.qtensor import QTensor
 from repro.core.quant import (ACT_QMAX, binarize_ste, binarize_weight,
                               lsq_fake_quant, lsq_grad_scale, quantize_act)
+from repro.kernels import config as _cfg
+from repro.kernels.config import KernelConfig
 from repro.kernels.w1a8_conv import ops as conv_ops
 from repro.kernels.w1a8_matmul import ops as mm_ops
+
+PROFILES = ("tuned", "default", "interpret")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -377,38 +381,138 @@ def deploy_yolo_kernel(params: dict) -> dict:
 
 
 def build_detector(key: jax.Array, calib_images: jax.Array, *,
-                   per_channel: bool = True) -> tuple:
+                   per_channel: bool = None,
+                   profile: str = None) -> tuple:
     """Init + range-calibrate + pack: the serving-deployment recipe.
 
     calib_images (B, 320, 320, 3) float in [0, 1]. Returns
     (calibrated float params, deploy_yolo_kernel artifact) — the float
     params stay the verification oracle for the packed path
     (core.verify, DESIGN.md §10). ``per_channel=False`` calibrates
-    per-tensor steps (required for ``yolo_forward_kernel(accum="popcount")``).
+    per-tensor steps (required for the XNOR-popcount accumulation path).
+    ``profile`` names the tuning profile the artifact is destined for:
+    ``"tuned"`` defaults ``per_channel=False`` so the autotuned popcount
+    configs are eligible at serve time; other profiles keep the
+    per-channel default.
     """
+    if profile is not None and profile not in PROFILES:
+        raise ValueError(f"profile must be one of {PROFILES}, got {profile!r}")
+    if per_channel is None:
+        per_channel = profile != "tuned"
     params = init_yolo_params(key)
     params = calibrate_yolo(params, calib_images, per_channel=per_channel)
     return params, deploy_yolo_kernel(params)
 
 
+def art_uniform_steps(art: dict) -> bool:
+    """True iff every W1A8 layer's input steps are per-tensor uniform
+    (the XNOR-popcount eligibility condition)."""
+    for entry in art["layers"][1:-1]:
+        steps = np.asarray(entry["step_in"])
+        if not np.all(steps == steps.reshape(-1)[0]):
+            return False
+    return True
+
+
+def yolo_layer_cells(batch: int = 1) -> list:
+    """Structural autotune cells for every W1A8 layer.
+
+    Returns [(layer name, op, dims)] with conv dims (h, w, cin, cout) of
+    the input plane and matmul dims (m, k, n), m = batch·h·w. Pooled
+    layers contribute both their ``conv3x3_pool`` cell (fused route) and
+    the plain ``conv3x3`` cell (unfused route); duplicates across layers
+    (conv5/6/8 share a shape) collapse by key.
+    """
+    sizes = spatial_sizes()
+    cells = []
+    for spec in YOLO_LAYERS:
+        if spec.kind != "w1a8":
+            continue
+        h = sizes[spec.name]
+        if spec.ksize == 3:
+            if spec.pool:
+                cells.append((spec.name, "conv3x3_pool",
+                              (h, h, spec.cin, spec.cout)))
+            cells.append((spec.name, "conv3x3", (h, h, spec.cin, spec.cout)))
+        else:
+            cells.append((spec.name, "matmul",
+                          (batch * h * h, spec.cin, spec.cout)))
+    return cells
+
+
+def _layer_config(spec: ConvSpec, h: int, batch: int, *, profile: str,
+                  accum, fuse_pool, interpret, uniform: bool,
+                  table) -> KernelConfig:
+    """Resolve one W1A8 layer's KernelConfig under the named profile.
+
+    Explicit ``accum`` / ``fuse_pool`` / ``interpret`` kwargs override the
+    profile's choice; "tuned" reads the autotune table (fastest accum
+    among eligible modes, fused-vs-unfused pool from the winning entry),
+    "default"/"interpret" reproduce the historical heuristics.
+    """
+    if spec.ksize == 1:
+        op, dims = "matmul", (batch * h * h, spec.cin, spec.cout)
+    elif spec.pool:
+        op, dims = "conv3x3_pool", (h, h, spec.cin, spec.cout)
+    else:
+        op, dims = "conv3x3", (h, h, spec.cin, spec.cout)
+    if profile == "tuned":
+        if accum is not None:
+            cfg = _cfg.resolve(op, dims, accum=accum, table=table)
+        else:
+            cfg = _cfg.resolve_tuned(op, dims, allow_popcount=uniform,
+                                     table=table)
+    else:
+        cfg = KernelConfig(op=op, accum=accum or "dot", source=profile)
+    if cfg.accum == "popcount" and op == "conv3x3_pool":
+        cfg = cfg.replace(fused=False)     # fused kernel is dot-only
+    if fuse_pool is not None:
+        cfg = cfg.replace(fused=fuse_pool)
+    elif profile != "tuned":
+        cfg = cfg.replace(fused=False)     # historical default
+    if interpret is not None:
+        cfg = cfg.replace(interpret=interpret)
+    elif profile == "interpret":
+        cfg = cfg.replace(interpret=True)
+    return cfg.replace(out_step=1.0)
+
+
 def yolo_forward_kernel(art: dict, images: jax.Array, *,
-                        interpret: bool = True,
-                        fuse_pool: bool = False,
-                        accum: str = "dot") -> jax.Array:
+                        profile: str = None,
+                        interpret: bool = None,
+                        fuse_pool: bool = None,
+                        accum: str = None) -> jax.Array:
     """Pallas streaming path. images (B,320,320,3) in [0,1] → (B,10,10,75) f32.
 
     Inter-layer tensors are uint8-code QTensors (requantized in each
     kernel's epilogue) — HBM activation traffic is 1 byte/elem, the
     streaming analogue; the codes+step pair crosses every layer boundary
-    as one object. ``fuse_pool`` routes pooled W1A8 layers (conv2–4,
-    conv7) through the fused conv+requant+MaxPool kernel (§5.2
-    Post+MaxPool stage chain): the pre-pool activation plane never exists
-    in HBM. Bit-exact vs the unfused path. ``accum="popcount"`` contracts
-    every W1A8 layer in the binary domain (XNOR-popcount); it requires a
+    as one object.
+
+    Per-layer launch configuration comes from ``profile``:
+
+    * ``"interpret"`` (default) — heuristic tiles, interpret-mode Pallas;
+      today's behavior everywhere.
+    * ``"default"`` — heuristic tiles, interpret auto-resolved from the
+      backend (compiled on real TPUs).
+    * ``"tuned"`` — per-layer winners from the committed autotune table
+      (`kernels/config.resolve`, exact → nearest-shape → heuristic),
+      including fastest-accum selection and the fused-vs-unfused pool
+      routing the table measured.
+
+    ``fuse_pool`` routes pooled W1A8 layers (conv2–4, conv7) through the
+    fused conv+requant+MaxPool kernel (§5.2 Post+MaxPool stage chain) —
+    bit-exact vs the unfused path. ``accum="popcount"`` contracts every
+    W1A8 layer in the binary domain (XNOR-popcount); it requires a
     per-tensor-calibrated artifact (``build_detector(per_channel=False)``)
-    and is checked host-side here.
+    and is checked host-side here. All three kwargs override the profile.
     """
+    if profile is None:
+        profile = "interpret"
+    if profile not in PROFILES:
+        raise ValueError(f"profile must be one of {PROFILES}, got {profile!r}")
     layers = art["layers"]
+    uniform = art_uniform_steps(art)
     if accum == "popcount":
         if fuse_pool:
             raise ValueError("fuse_pool is a dot-path kernel; "
@@ -420,6 +524,9 @@ def yolo_forward_kernel(art: dict, images: jax.Array, *,
                     f"accum='popcount' needs uniform act steps; "
                     f"{entry['spec'].name} is per-channel calibrated — "
                     f"use build_detector(per_channel=False)")
+    table = _cfg.load_table() if profile == "tuned" else None
+    sizes = spatial_sizes()
+    batch = images.shape[0]
     # conv1 (std, fixed-point-rounded weights) in f32, then quantize to codes.
     w1 = fxp.CONV1_W.roundtrip(layers[0]["w"])
     b1 = fxp.CONV1_B.roundtrip(layers[0]["b"])
@@ -429,6 +536,9 @@ def yolo_forward_kernel(art: dict, images: jax.Array, *,
 
     for entry in layers[1:-1]:
         spec: ConvSpec = entry["spec"]
+        cfg = _layer_config(spec, sizes[spec.name], batch, profile=profile,
+                            accum=accum, fuse_pool=fuse_pool,
+                            interpret=interpret, uniform=uniform, table=table)
         # Mul_prev = this layer's input steps (= qx.scale: the QTensor
         # carries exactly the dequant context the next kernel fuses);
         # per-channel requant is folded into the epilogue:
@@ -437,27 +547,22 @@ def yolo_forward_kernel(art: dict, images: jax.Array, *,
         s_next = entry["step_out"]                     # (cout,) vector
         div_eff = entry["alpha"] / s_next
         b_eff = entry["b"] / s_next
-        if spec.ksize == 3 and spec.pool and fuse_pool:
+        if spec.ksize == 3 and spec.pool:
             codes = conv_ops.w1a8_conv3x3_pool(
                 qx.data, entry["w_packed"], mul_prev, div_eff, b_eff,
-                cin=spec.cin, out_step=1.0, interpret=interpret)
+                cin=spec.cin, config=cfg)
             qx = QTensor.from_codes(codes, s_next, axis=-1)
             continue
         if spec.ksize == 3:
             out = conv_ops.w1a8_conv3x3(
                 qx.data, entry["w_packed"], mul_prev, div_eff, b_eff,
-                cin=spec.cin, out_step=1.0, accum=accum,
-                interpret=interpret)
+                cin=spec.cin, config=cfg)
         else:
             b, h, w, _ = qx.data.shape
             out = mm_ops.w1a8_matmul(
                 qx.data.reshape(b * h * w, spec.cin), entry["w_packed"],
-                mul_prev, div_eff, b_eff, k=spec.cin,
-                out_step=1.0, accum=accum, interpret=interpret)
+                mul_prev, div_eff, b_eff, k=spec.cin, config=cfg)
             out = out.reshape(b, h, w, spec.cout)
-        if spec.pool:
-            out = jax.lax.reduce_window(out, jnp.uint8(0), jax.lax.max,
-                                        (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
         qx = QTensor.from_codes(out, s_next, axis=-1)
 
     # conv11 detection head (std 1×1, fixed-point weights) on dequant codes.

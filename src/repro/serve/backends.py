@@ -34,10 +34,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.config import _UNSET
 from repro.models.layers import ModelConfig
 from repro.serve import cache as cache_mod
 from repro.serve.api import Emission, ServeRequest
 from repro.serve.engine import decode_step, decode_step_donemask, prefill
+
+# DetectionBackend's legacy kernel kwargs warn exactly once per process
+# (the ServeEngine pattern); tests reset this to re-arm the warning.
+_detect_kwargs_warned = False
+
+
+def _warn_detect_kwargs_once() -> None:
+    global _detect_kwargs_warned
+    if _detect_kwargs_warned:
+        return
+    _detect_kwargs_warned = True
+    import warnings
+    warnings.warn(
+        "DetectionBackend(interpret=/fuse_pool=) is deprecated; pass "
+        "profile='tuned'|'default'|'interpret' instead",
+        DeprecationWarning, stacklevel=3)
 
 
 class LMBackend:
@@ -222,8 +239,16 @@ class DetectionBackend:
     at a fixed batch width (= ``slots``); partial batches zero-pad so every
     tick reuses the same executable. ``overlap=True`` double-buffers:
     dispatch tick t's batch, harvest it at t+1 (see module docstring).
-    ``fuse_pool=True`` routes pool layers through the fused conv+maxpool
-    Pallas kernel (kernels/w1a8_conv/fused_pool).
+
+    Kernel launch configuration comes from ``profile``
+    (`models.yolo.PROFILES`): ``"tuned"`` — the serving default — resolves
+    per-layer winners from the committed autotune table (which is where
+    ``fuse_pool=True`` became the default for pool layers, it wins on the
+    table); ``"interpret"`` reproduces the historical heuristic/interpret
+    behavior; ``"default"`` is heuristics with backend-resolved compile
+    mode. The old raw kernel kwargs (``interpret=``, ``fuse_pool=``)
+    survive one release behind a DeprecationWarning and force the
+    equivalent profile override.
 
     ``device_nms=True`` changes the emission wire, not the math: the NMS
     always runs inside the one executable, but the default wire still ships
@@ -241,19 +266,33 @@ class DetectionBackend:
     instead of charging tick t with tick t−1's bytes.
     """
 
-    def __init__(self, art: dict, *, slots: int = 4, interpret: bool = True,
-                 overlap: bool = False, fuse_pool: bool = False,
-                 device_nms: bool = False,
+    def __init__(self, art: dict, *, slots: int = 4, profile: str = None,
+                 overlap: bool = False, device_nms: bool = False,
                  iou_thresh: float = 0.45, score_thresh: float = 0.25,
-                 max_out: int = 50):
+                 max_out: int = 50, interpret=_UNSET, fuse_pool=_UNSET):
         from repro.models import detection, yolo
+        overrides = {}
+        if interpret is not _UNSET or fuse_pool is not _UNSET:
+            if profile is not None:
+                raise TypeError("pass either profile= or the legacy "
+                                "interpret=/fuse_pool= kwargs, not both")
+            _warn_detect_kwargs_once()
+            profile = "interpret"            # the historical default regime
+            if interpret is not _UNSET:
+                overrides["interpret"] = interpret
+            if fuse_pool is not _UNSET:
+                overrides["fuse_pool"] = fuse_pool
+        if profile is None:
+            profile = "tuned"
+        if profile not in yolo.PROFILES:
+            raise ValueError(
+                f"profile must be one of {yolo.PROFILES}, got {profile!r}")
         self.art = art
         self.width = slots                        # device batch per dispatch
         self.overlap = overlap
         self.capacity = 2 * slots if overlap else slots
         self.admit_width = slots
-        self.interpret = interpret
-        self.fuse_pool = fuse_pool
+        self.profile = profile
         self.device_nms = device_nms
         self.post = dict(iou_thresh=iou_thresh, score_thresh=score_thresh,
                          max_out=max_out)
@@ -266,8 +305,8 @@ class DetectionBackend:
         self._input_size = yolo.INPUT_SIZE
 
         def _bundle(imgs):
-            raw = yolo.yolo_forward_kernel(art, imgs, interpret=interpret,
-                                           fuse_pool=fuse_pool)
+            raw = yolo.yolo_forward_kernel(art, imgs, profile=profile,
+                                           **overrides)
             boxes, scores, classes = detection.postprocess(raw, **self.post)
             if device_nms:                        # compact emission wire only
                 return jax.vmap(detection.compact_detections)(boxes, scores,
