@@ -20,7 +20,10 @@ the two backends:
             set matches the raw-wire path and shrinks per-sync bytes
             ≥ 10×. ``--burst 4x`` submits the whole stream as one burst
             (4× the slot width) through the bounded wait queue and asserts
-            zero drops and ≤ 1 host sync per tick.
+            zero drops and ≤ 1 host sync per tick. ``--replicas N`` (and
+            ``--autoscale``) additionally routes the same stream through a
+            fleet Router of N spawned replicas (serve.fleet) and asserts
+            the payloads stay bit-exact vs the single-scheduler run.
 
 Writes/merges throughput + latency + occupancy + host-sync numbers into
 ``benchmarks/results/BENCH_serve.json`` (methodology: EXPERIMENTS.md §Serve).
@@ -203,6 +206,43 @@ def run_detect(args) -> dict:
               f"{summary['host_syncs_per_tick']:.2f} host syncs/tick, "
               f"queue depth max {summary['queue_depth_max']}")
 
+    # fleet tier (--replicas N / --autoscale): the same stream through a
+    # Router of spawned replicas must complete the same request-id set with
+    # bit-exact payloads as the single-scheduler headline run above
+    fleet_record = None
+    if args.replicas > 1 or args.autoscale:
+        from repro.serve.fleet import (Autoscaler, AutoscalerConfig,
+                                       FleetMetrics, Router)
+        template = DetectionBackend(art, slots=args.slots, overlap=True,
+                                    profile=args.profile, device_nms=True)
+        template.warmup()              # one compile covers every spawn()
+        scaler = None
+        if args.autoscale:
+            scaler = Autoscaler(AutoscalerConfig(
+                min_replicas=args.replicas, max_replicas=2 * args.replicas))
+        router = Router(template.spawn, replicas=args.replicas,
+                        autoscaler=scaler, metrics=FleetMetrics(),
+                        keep_results=True)
+        fleet_results = router.run([ServeRequest(rid=i, image=imgs_u8[i])
+                                    for i in range(n_req)])
+        assert router.metrics.lost == 0 and router.metrics.dropped == 0
+        dn_payloads = {r.rid: r.detections for r in dn_results}
+        assert sorted(r.rid for r in fleet_results) == sorted(dn_payloads)
+        for r in fleet_results:
+            ref_p = dn_payloads[r.rid]
+            for leaf in ref_p:
+                assert np.array_equal(np.asarray(r.detections[leaf]),
+                                      np.asarray(ref_p[leaf])), \
+                    f"fleet payload diverged: rid {r.rid} field {leaf!r}"
+        fleet_record = {"replicas": args.replicas,
+                        "autoscale": bool(args.autoscale),
+                        "equivalence": "completed-id sets equal, payloads "
+                                       "bit-exact vs single-scheduler run",
+                        **router.metrics.summary()}
+        print(f"[fleet] {n_req} requests through {args.replicas} replicas"
+              f"{' (+autoscale)' if args.autoscale else ''}: payloads "
+              f"bit-exact vs single-scheduler run")
+
     # §6.3 alignment of the served (packed/Pallas) path vs float reference
     ref = np.asarray(yolo.yolo_forward_float(
         params, jnp.asarray(imgs_u8, jnp.float32) / 256.0), np.float64)
@@ -229,6 +269,7 @@ def run_detect(args) -> dict:
             "sync_bytes_reduction_vs_raw_wire": reduction,
             "alignment": {"max_abs": rep.max_abs, "mean_abs": rep.mean_abs,
                           "within_1lsb": rep.within_1lsb},
+            **({"fleet": fleet_record} if fleet_record else {}),
             **summary,
             "baseline_raw_wire": {"pipelining": "double_buffered",
                                   "nms": "device_plus_raw_head_wire",
@@ -255,6 +296,13 @@ def main():
     ap.add_argument("--burst", default="",
                     help="submit the whole stream as one burst, e.g. 4x = "
                          "4×slots requests (detect)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="detect: also run the stream through a fleet "
+                         "Router of N spawned replicas and assert payload "
+                         "bit-exactness vs the single-scheduler run")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="detect: attach an Autoscaler "
+                         "(--replicas..2x--replicas) to the fleet run")
     ap.add_argument("--profile", choices=("tuned", "default", "interpret"),
                     default="tuned",
                     help="kernel tuning profile for the detect backend "

@@ -1,0 +1,377 @@
+"""Fleet traffic harness: ``python -m repro.launch.traffic --mode {model,real}``.
+
+Replays seeded synthetic traffic through the fleet tier (serve.fleet:
+Router → replica Schedulers → Autoscaler), two ways:
+
+  model — the pure-python replay: ModelBackend replicas whose step cost is
+          calibrated from the committed BENCH_serve.json detect record
+          (device batch width = ``slots``, wall cost per tick =
+          ``tick_p50_ms``), so SLO accounting runs in scheduler ticks — the
+          unit the real fleet shares — at millions of requests per minute
+          of harness time. Sweeps steady / diurnal / burst traces at 1, 2
+          and 4 fixed replicas plus one autoscaled (1→4) run per trace and
+          writes fleet SLO accounting (attainment %, drops by cause,
+          replica-count timeline) into benchmarks/results/BENCH_fleet.json.
+          Every cell asserts ZERO lost requests (completed + every drop
+          cause = submitted).
+  real  — the reduced run through actual DetectionBackend replicas (shared
+          compiled executable via backend.spawn()): the same seeded request
+          stream through a 1-replica fleet and an N-replica fleet must
+          complete the SAME request-id set with BIT-EXACT detection
+          payloads — routing and scale must never change what a request
+          computes.
+
+Traces (per-tick Poisson arrivals from a seeded generator; rates are
+relative to a 2-replica fleet's service capacity):
+  steady   0.85× reference capacity, constant;
+  diurnal  0.85× mean with a ±0.80× two-period sinusoid (trough ~0.05,
+           peak ~1.65 — overloads 2 replicas, fits 4);
+  burst    0.60× base with ~1/400-per-tick chance of a 25-tick 6× spike.
+
+Request mix: 90% priority 0 (admission deadline 2×SLO, completion deadline
+2×SLO — a request admitted at the very edge of its admission window can no
+longer finish and is dropped in flight), 10% priority 1 background (no
+admission deadline, completion deadline 4×SLO — starved background work
+expires instead of completing arbitrarily late). Attainment counts
+completions within ``slo_ticks`` end-to-end over ALL submissions.
+
+``--gate-bench`` reads the committed BENCH_fleet.json BEFORE overwriting it
+and fails when any model cell's SLO attainment drops below committed ×
+0.95 (the replay is deterministic in ticks, so this really gates scheduler
+semantics, not machine speed) or loses a request.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+DEFAULT_OUT = "benchmarks/results/BENCH_fleet.json"
+SERVE_BENCH = "benchmarks/results/BENCH_serve.json"
+TRACES = ("steady", "diurnal", "burst")
+FIXED_REPLICAS = (1, 2, 4)
+REF_REPLICAS = 2          # trace rates are sized against this fleet
+
+
+def calibrate(serve_bench: str) -> dict:
+    """Replica step-cost model from the committed detect serving record.
+
+    The committed detect config is double-buffered (batch t computes while
+    t+1 stages), so the model replica mirrors it: 2×width slots, width
+    admissions per tick, 2-tick service — steady throughput is width
+    requests per tick and every request's latency includes the overlap
+    pipeline's extra tick, same as the real backend."""
+    width, tick_ms = 2, 200.0
+    p = pathlib.Path(serve_bench)
+    if p.exists():
+        try:
+            rec = json.loads(p.read_text()).get("detect", {})
+            width = int(rec.get("slots", width))
+            tick_ms = float(rec.get("tick_p50_ms", tick_ms))
+        except (json.JSONDecodeError, TypeError, ValueError):
+            pass
+    return {"width": width, "tick_ms": tick_ms, "service_ticks": 2,
+            "overlap": True, "source": serve_bench}
+
+
+def gen_trace(kind: str, n_requests: int, ref_rate: float,
+              rng: np.random.Generator) -> np.ndarray:
+    """Per-tick arrival counts; Σ ≈ n_requests."""
+    if kind == "steady":
+        mean = 0.85 * ref_rate
+        ticks = max(int(round(n_requests / mean)), 1)
+        rate = np.full(ticks, mean)
+    elif kind == "diurnal":
+        mean = 0.85 * ref_rate
+        ticks = max(int(round(n_requests / mean)), 1)
+        t = np.arange(ticks)
+        rate = ref_rate * (0.85 + 0.80 * np.sin(2 * np.pi * 2 * t / ticks))
+        rate = np.clip(rate, 0.05, None)
+    elif kind == "burst":
+        base, spike_p, spike_len, spike_mult = 0.60, 1 / 400, 25, 6.0
+        mean = base * ref_rate * (1 + spike_p * spike_len * spike_mult)
+        ticks = max(int(round(n_requests / mean)), 1)
+        rate = np.full(ticks, base * ref_rate)
+        starts = np.flatnonzero(rng.random(ticks) < spike_p)
+        for s in starts:
+            rate[s:s + spike_len] = spike_mult * base * ref_rate
+    else:
+        raise ValueError(f"unknown trace kind {kind!r}")
+    return rng.poisson(rate).astype(np.int64)
+
+
+def replay_model(kind: str, n_replicas: int, *, n_requests: int, seed: int,
+                 cal: dict, slo_ticks: int, autoscale: bool = False,
+                 max_replicas: int = 4) -> dict:
+    from repro.serve.api import SamplingParams, ServeRequest
+    from repro.serve.fleet import (Autoscaler, AutoscalerConfig,
+                                   FleetMetrics, ModelBackend, Router)
+
+    width, service = cal["width"], cal["service_ticks"]
+    overlap = bool(cal.get("overlap", False))
+    # per-replica steady throughput: capacity / service ticks
+    ref_rate = REF_REPLICAS * (2 * width if overlap else width) / service
+    # str hash is per-process randomized; the trace seed must not be
+    rng = np.random.default_rng([seed, TRACES.index(kind)])
+    arrivals = gen_trace(kind, n_requests, ref_rate, rng)
+    total = int(arrivals.sum())
+    background = rng.random(total) < 0.10
+
+    scaler = None
+    if autoscale:
+        scaler = Autoscaler(AutoscalerConfig(
+            min_replicas=n_replicas, max_replicas=max_replicas,
+            window=8, queue_high=2.0, occ_low=0.35,
+            cooldown_up=8, cooldown_down=48))
+    metrics = FleetMetrics(slo_ticks=slo_ticks)
+    # queue bound sized so waits can overrun the admission deadline: both
+    # expiry causes (not just rejection) show up in the drop accounting
+    router = Router(lambda: ModelBackend(width, service, overlap=overlap),
+                    replicas=n_replicas, max_queue=4 * width * slo_ticks,
+                    autoscaler=scaler, metrics=metrics)
+    sp = SamplingParams()              # shared: requests carry no LM state
+    rid = 0
+    t0 = time.perf_counter()
+    for n_arr in arrivals:
+        for _ in range(int(n_arr)):
+            if background[rid]:
+                req = ServeRequest(rid=rid, sampling=sp, priority=1,
+                                   completion_deadline_ticks=4 * slo_ticks)
+            else:
+                req = ServeRequest(rid=rid, sampling=sp,
+                                   deadline_ticks=2 * slo_ticks,
+                                   completion_deadline_ticks=2 * slo_ticks)
+            router.submit(req)
+            rid += 1
+        router.tick()
+    router.drain()
+    elapsed = time.perf_counter() - t0
+    assert rid == total
+    assert metrics.lost == 0, (kind, n_replicas, metrics.summary())
+    summary = metrics.summary()
+    n_events = len(summary.pop("scale_events"))
+    return {"trace": kind, "replicas": n_replicas,
+            "autoscale": bool(autoscale),
+            "trace_ticks": int(len(arrivals)),
+            "replay_seconds": round(elapsed, 3),
+            "n_scale_events": n_events,
+            "simulated_wall_s": round(summary["ticks"] * cal["tick_ms"]
+                                      / 1e3, 1),
+            **summary}
+
+
+def run_model(args) -> dict:
+    cal = calibrate(args.serve_bench)
+    slo_ticks = max(int(round(args.slo_ms / cal["tick_ms"])), 4)
+    record = {"config": {**cal, "slo_ms": args.slo_ms,
+                         "slo_ticks": slo_ticks,
+                         "requests_per_cell": args.requests,
+                         "seed": args.seed}}
+    total = 0
+    t0 = time.perf_counter()
+    for kind in TRACES:
+        cells = {}
+        for n in FIXED_REPLICAS:
+            cell = replay_model(kind, n, n_requests=args.requests,
+                                seed=args.seed, cal=cal, slo_ticks=slo_ticks)
+            cells[f"replicas_{n}"] = cell
+            total += cell["requests_submitted"]
+            print(f"[model] {kind:8s} x{n}: "
+                  f"{cell['requests_submitted']} reqs, "
+                  f"attainment {cell['slo_attainment']:.3f}, drops "
+                  f"{cell['drops_by_cause']} ({cell['replay_seconds']}s)")
+        cell = replay_model(kind, 1, n_requests=args.requests,
+                            seed=args.seed, cal=cal, slo_ticks=slo_ticks,
+                            autoscale=True, max_replicas=4)
+        cells["autoscale_1to4"] = cell
+        total += cell["requests_submitted"]
+        print(f"[model] {kind:8s} auto(1→4): attainment "
+              f"{cell['slo_attainment']:.3f}, replicas "
+              f"{cell['replicas_min']}→{cell['replicas_max']} "
+              f"({cell['n_scale_events']} scale events, "
+              f"{cell['replay_seconds']}s)")
+        record[kind] = cells
+    elapsed = time.perf_counter() - t0
+    record["total_requests"] = total
+    record["harness_seconds"] = round(elapsed, 1)
+    print(f"[model] replayed {total} requests in {elapsed:.1f}s")
+    if args.max_seconds:
+        # 10x the per-cell request count: at the default --requests 100000
+        # this is the acceptance floor of 1e6 total replayed requests, and
+        # it scales down for reduced smoke runs instead of always demanding
+        # the full million.
+        floor = 10 * args.requests
+        assert total >= floor, \
+            f"replayed only {total} requests (need >= {floor})"
+        assert elapsed < args.max_seconds, \
+            f"replay took {elapsed:.1f}s (budget {args.max_seconds}s)"
+    return record
+
+
+# ---------------------------------------------------------------------------
+# Real mode: reduced trace through actual DetectionBackend replicas
+# ---------------------------------------------------------------------------
+
+def _image(seed: int, rid: int, size: int) -> np.ndarray:
+    """Deterministic per-rid uint8 image — distinct per request, generated
+    lazily so a 2k-request stream never holds 2k images live."""
+    rng = np.random.default_rng([seed, rid])
+    return rng.integers(0, 256, (size, size, 3), np.uint8)
+
+
+def _run_real_fleet(template, n_replicas: int, n_req: int, seed: int,
+                    size: int) -> tuple:
+    from repro.serve.api import ServeRequest
+    from repro.serve.fleet import FleetMetrics, Router
+
+    metrics = FleetMetrics()
+    router = Router(template.spawn, replicas=n_replicas, keep_results=True,
+                    metrics=metrics)
+    width = template.admit_width
+    rid = 0
+    t0 = time.perf_counter()
+    while rid < n_req or router.busy:
+        # paced submission: keep ~2 batches queued per replica so the
+        # admission pipeline stays full without holding the stream's
+        # images live all at once
+        while rid < n_req and router.total_queued() < 2 * n_replicas * width:
+            router.submit(ServeRequest(rid=rid,
+                                       image=_image(seed, rid, size)))
+            rid += 1
+        router.tick()
+    elapsed = time.perf_counter() - t0
+    assert metrics.lost == 0 and metrics.dropped == 0, metrics.summary()
+    payloads = {r.rid: r.detections for r in router.results}
+    assert len(payloads) == n_req
+    return payloads, metrics.summary(), elapsed
+
+
+def run_real(args) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.models import yolo
+    from repro.serve import DetectionBackend
+
+    n_req = args.requests
+    size = yolo.INPUT_SIZE
+    _, art = yolo.build_detector(
+        jax.random.PRNGKey(args.seed),
+        jnp.asarray(_image(args.seed, 0, size)[None], jnp.float32) / 256.0,
+        profile=args.profile)
+    template = DetectionBackend(art, slots=args.slots, overlap=True,
+                                device_nms=True, profile=args.profile)
+    template.warmup()                  # one compile covers every spawn()
+
+    single, single_summary, t1 = _run_real_fleet(template, 1, n_req,
+                                                 args.seed, size)
+    fleet, fleet_summary, tn = _run_real_fleet(template, args.replicas,
+                                               n_req, args.seed, size)
+    assert set(fleet) == set(single) == set(range(n_req)), \
+        "fleet completed a different request-id set than single-replica"
+    for rid in range(n_req):
+        a, b = single[rid], fleet[rid]
+        assert a.keys() == b.keys(), rid
+        for k in a:
+            assert np.array_equal(np.asarray(a[k]), np.asarray(b[k])), \
+                f"rid {rid}: payload field {k!r} diverged across fleets"
+    print(f"[real] {n_req} requests: 1-replica {n_req/t1:.2f} img/s, "
+          f"{args.replicas}-replica {n_req/tn:.2f} img/s; completed sets "
+          f"equal, payloads bit-exact")
+    return {"requests": n_req, "replicas": args.replicas,
+            "slots": args.slots, "profile": args.profile,
+            "equivalence": "completed-id sets equal, payloads bit-exact "
+                           "vs 1-replica fleet",
+            "img_per_s_single": n_req / t1,
+            "img_per_s_fleet": n_req / tn,
+            "fleet": fleet_summary, "single": single_summary}
+
+
+# ---------------------------------------------------------------------------
+
+def _write_bench(path: str, key: str, record: dict) -> None:
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    data = {}
+    if p.exists():
+        try:
+            data = json.loads(p.read_text())
+        except json.JSONDecodeError:
+            data = {}
+    data[key] = record
+    p.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+    print(f"[bench] wrote {path} [{key}]")
+
+
+def _gate(committed: dict, record: dict) -> None:
+    """Fail when a model cell lost a request or its SLO attainment fell
+    below committed × 0.95."""
+    for kind in TRACES:
+        for cell_name, cell in record.get(kind, {}).items():
+            assert cell["requests_lost"] == 0, (kind, cell_name)
+            old = committed.get(kind, {}).get(cell_name, {})
+            floor = old.get("slo_attainment")
+            if floor is None:
+                continue
+            got = cell["slo_attainment"]
+            assert got >= floor * 0.95 - 1e-12, \
+                (f"{kind}/{cell_name}: attainment {got:.4f} < committed "
+                 f"{floor:.4f} x 0.95")
+            print(f"[gate] {kind}/{cell_name}: {got:.4f} >= "
+                  f"{floor:.4f} x 0.95 OK")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("model", "real"), default="model")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="model: requests PER CELL (default 100000, 12 "
+                         "cells); real: total requests (default 2048)")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="fleet width for the real run")
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--profile", choices=("tuned", "default", "interpret"),
+                    default="tuned")
+    ap.add_argument("--slo-ms", type=float, default=5000.0,
+                    help="end-to-end completion SLO (converted to ticks "
+                         "via the calibrated tick cost)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--serve-bench", default=SERVE_BENCH)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--max-seconds", type=float, default=0.0,
+                    help="model: assert >=1e6 requests replayed under this "
+                         "wall budget (0 = no assert)")
+    ap.add_argument("--gate-bench", action="store_true",
+                    help="model: fail when a cell loses requests or SLO "
+                         "attainment < committed x 0.95")
+    args = ap.parse_args()
+    if args.requests is None:
+        args.requests = 100_000 if args.mode == "model" else 2048
+
+    committed = {}
+    if args.gate_bench:
+        p = pathlib.Path(args.out)
+        if p.exists():
+            try:
+                committed = json.loads(p.read_text()).get("model", {})
+            except json.JSONDecodeError:
+                committed = {}
+
+    if args.mode == "model":
+        record = run_model(args)
+        if args.gate_bench:
+            if committed:
+                _gate(committed, record)
+            else:
+                print(f"[gate] no committed model record in {args.out} — "
+                      f"gate records, next run enforces")
+        _write_bench(args.out, "model", record)
+    else:
+        record = run_real(args)
+        _write_bench(args.out, "real", record)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,5 +12,6 @@ from repro.serve.engine import (decode_step, generate,  # noqa: F401
                                 prefill)
 from repro.serve.packed import deploy_lm, packed_param_bytes  # noqa: F401
 from repro.serve.scheduler import Scheduler  # noqa: F401
+from repro.serve import fleet  # noqa: F401
 from repro.serve import sp  # noqa: F401
 from repro.serve.batching import Request, ServeEngine  # noqa: F401

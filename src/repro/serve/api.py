@@ -61,6 +61,15 @@ class ServeRequest:
     # must reach a pool slot within this many ticks or it expires in the
     # wait queue (finish_reason "expired"). None → wait forever (FIFO).
     deadline_ticks: Optional[int] = None
+    # Completion deadline, in scheduler ticks from submission: once admitted,
+    # the request must COMPLETE within this many ticks of its submit or the
+    # scheduler drops the in-flight work at harvest (finish_reason "expired",
+    # counted separately as expired_inflight). None → run to completion.
+    completion_deadline_ticks: Optional[int] = None
+    # Priority class: admission pops (priority, deadline, arrival-seq), so
+    # LOWER numbers admit first; within one class ordering stays EDF with
+    # FIFO tie-break. Default 0 keeps pre-priority traffic byte-identical.
+    priority: int = 0
 
 
 @dataclasses.dataclass
@@ -121,12 +130,16 @@ class EngineMetrics:
     completed: int = 0
     rejected: int = 0                 # bounded wait queue was full at submit
     expired: int = 0                  # admission deadline passed while queued
+    expired_inflight: int = 0         # completion deadline overran in a slot
     host_syncs: int = 0               # per-tick step/harvest-path transfers
     host_sync_bytes: int = 0          # bytes over those transfers
     completion_syncs: int = 0         # request-completion transfers
     tick_s: List[float] = dataclasses.field(default_factory=list)
     occupancy: List[float] = dataclasses.field(default_factory=list)
     queue_depth: List[int] = dataclasses.field(default_factory=list)
+    # end-to-end ticks (wait + service) per COMPLETED request — the per-
+    # replica latency distribution the fleet SLO roll-up consumes
+    latency_ticks: List[int] = dataclasses.field(default_factory=list)
 
     def record_tick(self, dt: float, active: int, *,
                     tokens: int = 0, images: int = 0,
@@ -140,20 +153,31 @@ class EngineMetrics:
 
     def summary(self) -> dict:
         wall = float(sum(self.tick_s))
+        # An all-rejected (or never-ticked) window has NO recorded tick
+        # latencies and NO completed requests: every quantile/mean below
+        # must fall back to 0.0 instead of dividing by (or quantiling over)
+        # an empty window — the summary is NaN-free by contract (regression:
+        # tests/test_fleet.py::test_summary_nan_free_on_all_rejected_window).
         lat = np.asarray(self.tick_s) if self.tick_s else np.zeros(1)
+        req_lat = (np.asarray(self.latency_ticks) if self.latency_ticks
+                   else np.zeros(1))
         return {
             "ticks": self.ticks,
             "wall_s": wall,
             "requests_completed": self.completed,
             "requests_rejected": self.rejected,
             "requests_expired": self.expired,
-            "requests_dropped": self.rejected + self.expired,
+            "requests_expired_inflight": self.expired_inflight,
+            "requests_dropped": (self.rejected + self.expired
+                                 + self.expired_inflight),
             "tokens": self.tokens,
             "images": self.images,
             "tok_per_s": self.tokens / wall if wall > 0 else 0.0,
             "img_per_s": self.images / wall if wall > 0 else 0.0,
             "tick_p50_ms": 1e3 * float(np.quantile(lat, 0.50)),
             "tick_p95_ms": 1e3 * float(np.quantile(lat, 0.95)),
+            "latency_p50_ticks": float(np.quantile(req_lat, 0.50)),
+            "latency_p95_ticks": float(np.quantile(req_lat, 0.95)),
             "batch_occupancy": (float(np.mean(self.occupancy))
                                 if self.occupancy else 0.0),
             "host_syncs": self.host_syncs,

@@ -323,6 +323,22 @@ class DetectionBackend:
             for o in jax.tree_util.tree_leaves(jax.eval_shape(self._fwd,
                                                               spec)))
 
+    def spawn(self) -> "DetectionBackend":
+        """Fresh replica of this backend for the fleet router: independent
+        slot/emission/sync state, SHARING the compiled fixed-width
+        executable (the program is stateless; the pool is not). One
+        warmup() on the template covers every spawned replica, so router
+        scale-up costs no recompile."""
+        import copy
+        twin = copy.copy(self)
+        twin._staged = []
+        twin._inflight = None
+        twin._emissions = {}
+        twin.host_syncs = 0
+        twin.host_sync_bytes = 0
+        twin.completion_syncs = 0
+        return twin
+
     def warmup(self) -> None:
         """Compile + run the fixed-width bundle once so serving ticks (and
         the overlap-on/off comparison in BENCH_serve) exclude trace time."""

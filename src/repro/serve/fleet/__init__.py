@@ -1,0 +1,12 @@
+"""Fleet-scale serving (DESIGN.md §14): a Router of N backend replicas —
+each its own Scheduler slot pool — with least-queue-depth dispatch
+(deadline-slack tie-break), a metrics-driven Autoscaler under hysteresis,
+and a FleetMetrics roll-up (per-replica + fleet p50/p95, drop-by-cause,
+scale events). `launch/traffic.py` replays synthetic diurnal/burst traces
+through this tier — millions of requests via the pure-python ModelBackend,
+a reduced run via real DetectionBackend replicas."""
+from repro.serve.fleet.autoscaler import (Autoscaler,  # noqa: F401
+                                          AutoscalerConfig)
+from repro.serve.fleet.metrics import FleetMetrics  # noqa: F401
+from repro.serve.fleet.model import ModelBackend  # noqa: F401
+from repro.serve.fleet.router import Replica, Router  # noqa: F401

@@ -1,0 +1,50 @@
+"""ModelBackend — the pure-python replica model for fleet-scale replay.
+
+A jax-free stand-in for DetectionBackend with the same scheduler-visible
+contract (capacity / admit_width / admit / step / harvest / release): a
+fixed device batch width, every admitted request completing
+``service_ticks`` after admission with one final payload emission. With
+``overlap=True`` it mirrors the double-buffered DetectionBackend: 2×width
+slots but width admissions per tick, so batch t computes while batch t+1
+stages — steady-state throughput is ``overlap_factor·width/service_ticks``
+requests per tick. One tick of this backend models one fixed-width detector
+dispatch whose wall cost is carried OUT of band (`tick_ms`, calibrated from
+the committed BENCH_serve.json detect record) — so a million-request
+traffic replay runs at pure-python speed while SLO accounting stays in
+scheduler ticks, the unit the real fleet shares.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+from repro.serve.api import Emission, ServeRequest
+
+
+class ModelBackend:
+    def __init__(self, width: int = 2, service_ticks: int = 1,
+                 tick_ms: float = 0.0, overlap: bool = False):
+        self.capacity = 2 * width if overlap else width
+        self.admit_width = width
+        self.service_ticks = max(int(service_ticks), 1)
+        self.tick_ms = float(tick_ms)      # modeled wall cost per tick
+        self._rows: Dict[int, int] = {}    # slot -> ticks left
+        self._ems: Dict[int, List[Emission]] = {}
+
+    def admit(self, assignments: Sequence[Tuple[int, ServeRequest]]) -> None:
+        for slot, _ in assignments:
+            self._rows[slot] = self.service_ticks
+
+    def step(self) -> None:
+        for slot in self._rows:
+            self._rows[slot] -= 1
+            if self._rows[slot] <= 0:
+                self._ems.setdefault(slot, []).append(
+                    Emission(payload=None, final=True))
+
+    def harvest(self) -> Dict[int, List[Emission]]:
+        out, self._ems = self._ems, {}
+        return out
+
+    def release(self, slot: int) -> None:
+        self._rows.pop(slot, None)
+        self._ems.pop(slot, None)

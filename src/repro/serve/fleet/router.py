@@ -1,0 +1,179 @@
+"""Router — the fleet tier above `serve.Scheduler` (DESIGN.md §14).
+
+A Router fronts N replicas. Each replica wraps its own backend (built by
+``backend_factory``) behind its own Scheduler slot pool, so everything the
+single-process serving stack guarantees — paged admission, EDF-within-
+priority, deadline expiry, slot conservation — holds per replica; the
+Router adds dispatch, elasticity and fleet accounting:
+
+  dispatch   submit() routes each request to the live replica with the
+             least wait-queue depth; ties break toward the replica whose
+             earliest queued admission deadline leaves the MOST slack
+             (deadline pressure is load the depth number can't see), then
+             by replica id — fully deterministic, so a fixed seed replays
+             the same fleet schedule.
+  tick       one fleet tick = one scheduler tick on every replica (live
+             and draining), then retirement of drained replicas, then one
+             autoscaler decision, then fleet metrics.
+  scale up   a fresh replica from backend_factory starts taking traffic on
+             the next submit.
+  scale down the least-loaded live replica is marked DRAINING: it stops
+             receiving new requests but keeps ticking until its wait queue
+             and slot pool empty, then retires — scale-down never strands
+             queued or in-flight work. Its EngineMetrics survive in
+             `retired` for the roll-up.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+from repro.serve.api import ServeRequest, ServeResult
+from repro.serve.fleet.autoscaler import Autoscaler
+from repro.serve.fleet.metrics import FleetMetrics
+from repro.serve.scheduler import Scheduler
+
+
+class Replica:
+    __slots__ = ("rid", "sched", "draining", "born_tick")
+
+    def __init__(self, rid: int, sched: Scheduler, born_tick: int):
+        self.rid = rid
+        self.sched = sched
+        self.draining = False
+        self.born_tick = born_tick
+
+
+class Router:
+    def __init__(self, backend_factory: Callable[[], object], *,
+                 replicas: int = 1,
+                 max_queue: Optional[int] = None,
+                 autoscaler: Optional[Autoscaler] = None,
+                 metrics: Optional[FleetMetrics] = None,
+                 keep_results: bool = False):
+        """``max_queue`` bounds each replica's wait queue (None = unbounded).
+        ``keep_results`` additionally retains every ServeResult on
+        self.results (the real-backend equivalence harness needs payloads;
+        the million-request model replay must not)."""
+        self._factory = backend_factory
+        self._max_queue = max_queue
+        self.autoscaler = autoscaler
+        self.metrics = metrics or FleetMetrics()
+        self.keep_results = keep_results
+        self.results: List[ServeResult] = []
+        self.replicas: Dict[int, Replica] = {}
+        self.retired: Dict[int, Scheduler] = {}
+        self.tick_no = 0
+        self._next_rid = 0
+        for _ in range(replicas):
+            self._add_replica()
+
+    # -- elasticity ----------------------------------------------------------
+    def _sink(self, res: ServeResult) -> None:
+        self.metrics.on_result(res)
+        if self.keep_results:
+            self.results.append(res)
+
+    def _add_replica(self) -> Replica:
+        rep = Replica(self._next_rid,
+                      Scheduler(self._factory(), max_queue=self._max_queue,
+                                result_sink=self._sink),
+                      self.tick_no)
+        self.replicas[rep.rid] = rep
+        self._next_rid += 1
+        return rep
+
+    def _drain_replica(self, rep: Replica) -> None:
+        rep.draining = True
+
+    def live(self) -> List[Replica]:
+        return [r for r in self.replicas.values() if not r.draining]
+
+    @property
+    def n_live(self) -> int:
+        return len(self.live())
+
+    def total_queued(self) -> int:
+        return sum(r.sched.queued for r in self.replicas.values())
+
+    def total_active(self) -> int:
+        return sum(len(r.sched.active) for r in self.replicas.values())
+
+    # -- dispatch ------------------------------------------------------------
+    def _route_key(self, rep: Replica):
+        # least queue depth; tie-break toward most deadline slack (earliest
+        # queued deadline furthest in the future), then replica id. Slack is
+        # measured against the REPLICA's tick clock: deadlines are absolute
+        # in each scheduler's local time, and a replica spawned at fleet
+        # tick t runs t ticks behind the fleet clock.
+        slack = rep.sched.earliest_deadline() - rep.sched.metrics.ticks
+        return (rep.sched.queued, -slack, rep.rid)
+
+    def submit(self, req: ServeRequest) -> bool:
+        target = min(self.live(), key=self._route_key)
+        return target.sched.submit(req)
+
+    # -- one fleet tick ------------------------------------------------------
+    def tick(self) -> None:
+        for rep in list(self.replicas.values()):
+            rep.sched.tick()
+        self._retire_drained()
+        if self.autoscaler is not None:
+            self._apply_scale(self.autoscaler.decide(
+                self.tick_no, [r.sched for r in self.live()]))
+        self.metrics.record_tick(self.tick_no, self.n_live,
+                                 self.total_queued())
+        self.tick_no += 1
+
+    def _retire_drained(self) -> None:
+        for rep in [r for r in self.replicas.values() if r.draining]:
+            sched = rep.sched
+            if not sched.queued and not sched.active and not sched.queue:
+                del self.replicas[rep.rid]
+                self.retired[rep.rid] = sched
+                self.metrics.record_scale(self.tick_no, "retired", rep.rid,
+                                          self.n_live)
+
+    def _apply_scale(self, delta: int) -> None:
+        if delta > 0:
+            rep = self._add_replica()
+            self.metrics.record_scale(self.tick_no, "up", rep.rid,
+                                      self.n_live)
+        elif delta < 0:
+            live = self.live()
+            if len(live) <= 1:
+                return                 # never drain the last live replica
+            victim = min(live, key=lambda r: (r.sched.queued,
+                                              len(r.sched.active), -r.rid))
+            self._drain_replica(victim)
+            self.metrics.record_scale(self.tick_no, "down", victim.rid,
+                                      self.n_live)
+
+    # -- driving -------------------------------------------------------------
+    @property
+    def busy(self) -> bool:
+        return any(r.sched.queue or r.sched.active
+                   for r in self.replicas.values())
+
+    def run(self, requests=None) -> List[ServeResult]:
+        """Submit then tick until the whole fleet drains. Returns retained
+        results when keep_results=True (else the FleetMetrics roll-up is
+        the record)."""
+        for req in requests or ():
+            self.submit(req)
+        self.drain()
+        return self.results
+
+    def drain(self, guard: int = 10**7) -> None:
+        while self.busy:
+            self.tick()
+            guard -= 1
+            if guard <= 0:
+                raise RuntimeError("fleet failed to drain")
+
+    def engine_summaries(self) -> Dict[int, dict]:
+        """Per-replica EngineMetrics summaries, retired replicas included."""
+        out = {rid: rep.sched.metrics.summary()
+               for rid, rep in self.replicas.items()}
+        out.update({rid: sched.metrics.summary()
+                    for rid, sched in self.retired.items()})
+        return out

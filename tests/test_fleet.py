@@ -1,0 +1,478 @@
+"""Fleet tier tests (serve.fleet): Router dispatch / elasticity against a
+pure-python fleet reference, Autoscaler hysteresis, FleetMetrics
+conservation, completion-deadline and priority semantics, and the
+NaN-free-summary regression.
+
+`run_fleet_trace` / `reference_fleet_trace` / `assert_fleet_trace_ok` are
+also imported by the fleet hypothesis property in tests/test_properties.py;
+keep them dependency-free (no jax in the trace machinery).
+"""
+import math
+import types
+
+import numpy as np
+
+from repro.serve.api import SamplingParams, ServeRequest, ServeResult
+from repro.serve.fleet import (Autoscaler, AutoscalerConfig, FleetMetrics,
+                               ModelBackend, Router)
+from repro.serve.scheduler import Scheduler
+
+_SP = SamplingParams()
+_INF = float("inf")
+
+
+def _req(rid, dl=None, prio=0, cd=None):
+    return ServeRequest(rid=rid, sampling=_SP, deadline_ticks=dl,
+                        priority=prio, completion_deadline_ticks=cd)
+
+
+# ---------------------------------------------------------------------------
+# Fleet trace property: Router vs a pure-python fleet reference
+# ---------------------------------------------------------------------------
+
+class ScriptedScaler:
+    """Deterministic Autoscaler stand-in: a {tick: ±1} script — the property
+    tests exercise the Router's scale/drain/retire paths without depending
+    on watermark tuning."""
+
+    def __init__(self, script):
+        self.script = dict(script or {})
+
+    def decide(self, tick, schedulers):
+        return self.script.get(tick, 0)
+
+
+def run_fleet_trace(n_replicas, width, service, trace, *, max_queue=None,
+                    scale_script=None):
+    """Drive a real Router (ModelBackend replicas) through an arrival trace.
+
+    ``trace`` = [(idle_ticks, burst), ...]; burst = [(rid, deadline_ticks,
+    priority), ...]. Returns ([(rid, finish_reason), ...] in result order,
+    fleet summary). Asserts drain leaves NO replica — live, draining or
+    retired — holding queued or in-flight work."""
+    router = Router(lambda: ModelBackend(width, service),
+                    replicas=n_replicas, max_queue=max_queue,
+                    autoscaler=ScriptedScaler(scale_script),
+                    metrics=FleetMetrics(slo_ticks=6), keep_results=True)
+    for idle, burst in trace:
+        for _ in range(idle):
+            router.tick()
+        for rid, dl, prio in burst:
+            router.submit(_req(rid, dl=dl, prio=prio))
+    router.drain(guard=10_000)
+    for rep in router.replicas.values():
+        assert rep.sched.queued == 0 and not rep.sched.active, \
+            f"replica {rep.rid} stranded work after drain"
+    for rrid, sched in router.retired.items():
+        assert sched.queued == 0 and not sched.active, \
+            f"retired replica {rrid} stranded work"
+    assert router.metrics.lost == 0, router.metrics.summary()
+    return ([(r.rid, r.finish_reason) for r in router.results],
+            router.metrics.summary())
+
+
+def reference_fleet_trace(n_replicas, width, service, trace, *,
+                          max_queue=None, scale_script=None):
+    """Pure-python fleet oracle with the documented semantics: submit routes
+    to the live replica with (least queue depth, most deadline slack,
+    lowest id); each replica ticks like the scheduler reference (expire
+    overdue in deadline order, admit (priority, deadline, seq) pages of
+    ``width``, fixed ``service``-tick rows, completions in slot order);
+    scale-down drains the least-loaded live replica, which retires only
+    once empty."""
+    scale_script = dict(scale_script or {})
+    results = []
+    reps = {}
+    tick_no, next_rid, seq = 0, 0, 0
+
+    def add_replica():
+        nonlocal next_rid
+        reps[next_rid] = {"waiting": [], "free": list(range(width)),
+                          "rows": {}, "draining": False}
+        next_rid += 1
+
+    for _ in range(n_replicas):
+        add_replica()
+
+    def sched_tick(rep):
+        overdue = sorted((w for w in rep["waiting"] if w[1] < tick_no),
+                         key=lambda w: (w[1], w[2]))
+        for _, _, _, rid in overdue:
+            results.append((rid, "expired"))
+        rep["waiting"] = sorted(w for w in rep["waiting"] if w[1] >= tick_no)
+        admitted = 0
+        while rep["waiting"] and rep["free"] and admitted < width:
+            _, _, _, rid = rep["waiting"].pop(0)
+            rep["rows"][rep["free"].pop(0)] = [rid, service]
+            admitted += 1
+        for slot in rep["rows"]:
+            rep["rows"][slot][1] -= 1
+        for slot in sorted(rep["rows"]):
+            rid, left = rep["rows"][slot]
+            if left <= 0:
+                results.append((rid, "ok"))
+                del rep["rows"][slot]
+                rep["free"].append(slot)
+
+    def fleet_tick():
+        nonlocal tick_no
+        for rep in list(reps.values()):
+            sched_tick(rep)
+        for rrid in [k for k, r in reps.items()
+                     if r["draining"] and not r["waiting"] and not r["rows"]]:
+            del reps[rrid]
+        delta = scale_script.get(tick_no, 0)
+        live = {k: r for k, r in reps.items() if not r["draining"]}
+        if delta > 0:
+            add_replica()
+        elif delta < 0 and len(live) > 1:
+            victim = min(live, key=lambda k: (len(live[k]["waiting"]),
+                                              len(live[k]["rows"]), -k))
+            reps[victim]["draining"] = True
+        tick_no += 1
+
+    def submit(rid, dl, prio):
+        nonlocal seq
+        live = {k: r for k, r in reps.items() if not r["draining"]}
+
+        def route_key(k):
+            dls = [w[1] for w in live[k]["waiting"] if w[1] != _INF]
+            slack = (min(dls) - tick_no) if dls else _INF
+            return (len(live[k]["waiting"]), -slack, k)
+
+        rep = live[min(live, key=route_key)]
+        if max_queue is not None and len(rep["waiting"]) >= max_queue:
+            results.append((rid, "rejected"))
+            return
+        rep["waiting"].append((prio, _INF if dl is None else tick_no + dl,
+                               seq, rid))
+        seq += 1
+
+    for idle, burst in trace:
+        for _ in range(idle):
+            fleet_tick()
+        for rid, dl, prio in burst:
+            submit(rid, dl, prio)
+    while any(r["waiting"] or r["rows"] for r in reps.values()):
+        fleet_tick()
+    return results
+
+
+def assert_fleet_trace_ok(n_replicas, width, service, trace, *,
+                          max_queue=None, scale_script=None):
+    got, summary = run_fleet_trace(n_replicas, width, service, trace,
+                                   max_queue=max_queue,
+                                   scale_script=scale_script)
+    want = reference_fleet_trace(n_replicas, width, service, trace,
+                                 max_queue=max_queue,
+                                 scale_script=scale_script)
+    label = (f"replicas={n_replicas} width={width} service={service} "
+             f"max_queue={max_queue} scale={scale_script} trace={trace!r}")
+    assert got == want, f"fleet diverged\n got {got}\nwant {want}\n{label}"
+    # conservation: every submitted rid surfaces exactly once
+    submitted = [rid for _, burst in trace for rid, _, _ in burst]
+    surfaced = sorted(rid for rid, _ in got)
+    assert surfaced == sorted(submitted), f"lost/duplicated rids\n{label}"
+    assert summary["requests_lost"] == 0
+    # deterministic replay: an identical run yields the identical stream
+    got2, summary2 = run_fleet_trace(n_replicas, width, service, trace,
+                                     max_queue=max_queue,
+                                     scale_script=scale_script)
+    assert got2 == got and summary2 == summary, f"replay diverged\n{label}"
+
+
+def _random_fleet_trace(rng):
+    n_replicas = int(rng.integers(1, 4))
+    width = int(rng.integers(1, 4))
+    service = int(rng.integers(1, 4))
+    max_queue = None if rng.integers(0, 2) == 0 else int(rng.integers(1, 7))
+    trace, rid = [], 0
+    for _ in range(int(rng.integers(1, 6))):
+        idle = int(rng.integers(0, 4))
+        burst = []
+        for _ in range(int(rng.integers(0, 4 * width + 1))):
+            dl = None if rng.integers(0, 2) == 0 else int(rng.integers(0, 7))
+            burst.append((rid, dl, int(rng.integers(0, 3))))
+            rid += 1
+        trace.append((idle, burst))
+    script = {int(rng.integers(0, 13)): int(rng.choice([-1, 1]))
+              for _ in range(int(rng.integers(0, 4)))}
+    return n_replicas, width, service, trace, max_queue, script
+
+
+def test_fleet_random_traces_match_reference():
+    """Seeded sweep of the same property the fleet hypothesis test explores
+    (tests/test_properties.py): random arrival traces with deadlines,
+    priorities, bounded queues and scripted scale events must match the
+    pure-python fleet reference, conserve every request, and replay
+    deterministically."""
+    for seed in range(40):
+        rng = np.random.default_rng(seed)
+        n, w, s, trace, mq, script = _random_fleet_trace(rng)
+        assert_fleet_trace_ok(n, w, s, trace, max_queue=mq,
+                              scale_script=script)
+
+
+# ---------------------------------------------------------------------------
+# Router dispatch + elasticity units
+# ---------------------------------------------------------------------------
+
+def test_router_least_depth_with_slack_tiebreak():
+    router = Router(lambda: ModelBackend(1, 5), replicas=2)
+    router.submit(_req(0, dl=2))            # both empty → replica 0
+    router.submit(_req(1, dl=9))            # depth tie broken by id → 1
+    assert [r.sched.queued for r in router.replicas.values()] == [1, 1]
+    # depths tied again: replica 1's queued deadline has MORE slack (9 vs
+    # 2), so it absorbs the next request — deadline pressure is load the
+    # depth number can't see
+    router.submit(_req(2))
+    assert router.replicas[1].sched.queued == 2
+    router.drain()
+    assert router.metrics.lost == 0
+
+
+def test_scale_down_drains_then_retires_never_strands():
+    """A scripted scale-down mid-burst marks a replica draining: it accepts
+    no new work but completes everything it holds before retiring."""
+    router = Router(lambda: ModelBackend(1, 3), replicas=2,
+                    autoscaler=ScriptedScaler({0: -1}),
+                    keep_results=True)
+    for rid in range(6):
+        router.submit(_req(rid))
+    router.drain()
+    assert sorted(r.rid for r in router.results) == list(range(6))
+    assert all(r.finish_reason == "ok" for r in router.results)
+    assert len(router.retired) == 1 and router.n_live == 1
+    retired = next(iter(router.retired.values()))
+    assert retired.queued == 0 and not retired.active
+    assert router.metrics.lost == 0
+    assert [e["action"] for e in router.metrics.scale_events] \
+        == ["down", "retired"]
+
+
+def test_scale_down_never_drains_last_live_replica():
+    router = Router(lambda: ModelBackend(1, 1), replicas=1,
+                    autoscaler=ScriptedScaler({0: -1, 1: -1}))
+    router.submit(_req(0))
+    router.drain()
+    for _ in range(3):
+        router.tick()
+    assert router.n_live == 1 and not router.metrics.scale_events
+
+
+def test_scale_up_takes_traffic_and_timeline_records_it():
+    router = Router(lambda: ModelBackend(1, 2), replicas=1,
+                    autoscaler=ScriptedScaler({1: +1}))
+    for rid in range(8):                    # arrivals span the scale event
+        router.submit(_req(rid))
+        router.tick()
+    router.drain()
+    assert router.metrics.lost == 0
+    summary = router.metrics.summary()
+    assert summary["replicas_max"] == 2 and summary["replicas_min"] == 1
+    # the spawned replica actually served part of the backlog
+    per_replica = router.engine_summaries()
+    assert len(per_replica) == 2
+    assert all(s["requests_completed"] > 0 for s in per_replica.values())
+
+
+# ---------------------------------------------------------------------------
+# Autoscaler hysteresis
+# ---------------------------------------------------------------------------
+
+def _stub_replica(depths, occs, capacity=2):
+    return types.SimpleNamespace(metrics=types.SimpleNamespace(
+        queue_depth=list(depths), occupancy=list(occs), tick_s=[0.0] * 8,
+        capacity=capacity))
+
+
+def test_autoscaler_watermarks_and_cooldowns():
+    cfg = AutoscalerConfig(min_replicas=1, max_replicas=3, window=4,
+                           queue_high=2.0, occ_low=0.5,
+                           cooldown_up=5, cooldown_down=10)
+    auto = Autoscaler(cfg)
+    # young replica (short metric history): hold regardless of pressure
+    assert auto.decide(0, [_stub_replica([99] * 2, [1.0] * 2)]) == 0
+    # sustained queue pressure → up; cooldown blocks an immediate repeat
+    hot = [_stub_replica([9] * 8, [1.0] * 8)]
+    assert auto.decide(10, hot) == +1
+    assert auto.decide(12, hot) == 0               # within cooldown_up
+    assert auto.decide(15, hot) == +1              # cooldown elapsed
+    # at max_replicas: hold even under pressure
+    assert auto.decide(30, [_stub_replica([9] * 8, [1.0] * 8)] * 3) == 0
+    # idle fleet scales down only after the (longer) down cooldown
+    idle = [_stub_replica([0] * 8, [0.0] * 8)] * 2
+    assert auto.decide(20, idle) == 0              # within cooldown_down
+    assert auto.decide(25, idle) == -1
+    # at min_replicas: never below the floor
+    assert auto.decide(50, [_stub_replica([0] * 8, [0.0] * 8)]) == 0
+    # busy-but-keeping-up (occupied, empty queue): hold, don't flap
+    busy = [_stub_replica([0] * 8, [1.0] * 8)] * 2
+    assert auto.decide(80, busy) == 0
+
+
+# ---------------------------------------------------------------------------
+# Completion deadlines + priorities (scheduler-level satellites)
+# ---------------------------------------------------------------------------
+
+def _drain(sched, guard=1000):
+    while sched.queue or sched.active:
+        sched.tick()
+        guard -= 1
+        assert guard > 0, "failed to drain"
+
+
+def test_completion_deadline_drops_inflight_overrun():
+    """In-flight work that overruns completion_deadline_ticks is dropped at
+    harvest (finish_reason 'expired', counted as expired_inflight), its
+    slot recycles, and the backend's late emissions are ignored."""
+    sched = Scheduler(ModelBackend(1, service_ticks=5))
+    sched.submit(_req(0, cd=3))
+    sched.submit(_req(1))                   # proves the slot recycles
+    _drain(sched)
+    by = {r.rid: r for r in sched.results}
+    assert by[0].finish_reason == "expired" and by[0].n_ticks == 3
+    assert by[0].deadline_met is False
+    assert by[1].finish_reason == "ok"
+    assert sched.metrics.expired_inflight == 1
+    assert sched.metrics.expired == 0
+    assert sched.metrics.completed == 1
+
+
+def test_completion_deadline_expires_hopeless_at_admission():
+    """A waiter whose completion deadline already passed while queued never
+    takes a slot: it expires at admission (n_ticks == 0, admission-expiry
+    bucket — FleetMetrics tells the two causes apart structurally)."""
+    sched = Scheduler(ModelBackend(1, service_ticks=10))
+    sched.submit(_req(0))                   # blocks the only slot 10 ticks
+    sched.submit(_req(1, cd=3))
+    _drain(sched)
+    by = {r.rid: r for r in sched.results}
+    assert by[1].finish_reason == "expired" and by[1].n_ticks == 0
+    assert sched.metrics.expired == 1
+    assert sched.metrics.expired_inflight == 0
+
+
+def test_completion_deadline_boundary_completes():
+    """A request finishing exactly at its completion deadline completes —
+    the drop only fires for work that can no longer finish in budget."""
+    sched = Scheduler(ModelBackend(1, service_ticks=3))
+    sched.submit(_req(0, cd=3))
+    _drain(sched)
+    assert sched.results[0].finish_reason == "ok"
+    assert sched.results[0].n_ticks == 3
+    assert sched.metrics.expired_inflight == 0
+
+
+def test_priority_admission_order():
+    """Lower priority number admits first; within a class, EDF with FIFO
+    tie-break — a later-arriving priority-0 request overtakes queued
+    priority-1 work."""
+    backend = ModelBackend(1, service_ticks=1)
+    sched = Scheduler(backend)
+    sched.submit(_req(0, prio=1))
+    sched.submit(_req(1, prio=1))
+    sched.submit(_req(2, prio=0))
+    sched.submit(_req(3, prio=0, dl=1))     # EDF inside class 0
+    _drain(sched)
+    assert [r.rid for r in sched.results] == [3, 2, 0, 1]
+
+
+def test_priority_starvation_bounded_by_completion_deadline():
+    """Strict priority can starve background work indefinitely under
+    sustained foreground load — the starvation BOUND is the background
+    class's completion deadline: a starved request is never SERVED past its
+    budget (it expires without ever taking a slot, surfacing the overload
+    instead of silently doing stale work), and once foreground pressure
+    stops, surviving background work admits in FIFO order."""
+    sched = Scheduler(ModelBackend(1, service_ticks=1))
+    sched.submit(_req(100, prio=1, cd=6))   # background, bounded staleness
+    sched.submit(_req(101, prio=1))         # background, unbounded
+    rid = 0
+    for _ in range(10):                     # sustained foreground pressure
+        sched.submit(_req(rid, prio=0))
+        rid += 1
+        sched.tick()
+    _drain(sched)
+    by = {r.rid: r for r in sched.results}
+    assert all(by[i].finish_reason == "ok" for i in range(10))
+    # bounded-staleness background work expired without ever being served
+    # past its budget (wait 10 ticks >> completion deadline 6, slot never
+    # taken)...
+    assert by[100].finish_reason == "expired"
+    assert by[100].n_ticks == 0 and by[100].wait_ticks > 6
+    # ...unbounded background work completed only after the pressure ended
+    assert by[101].finish_reason == "ok"
+    order = [r.rid for r in sched.results]
+    assert order.index(101) > order.index(9)
+
+
+# ---------------------------------------------------------------------------
+# Metrics: NaN-free summaries + conservation identity
+# ---------------------------------------------------------------------------
+
+def _assert_nan_free(summary):
+    for key, val in summary.items():
+        if isinstance(val, float):
+            assert math.isfinite(val), f"{key} = {val}"
+
+
+def test_summary_nan_free_on_all_rejected_window():
+    """Regression (referenced from EngineMetrics.summary): a tick window
+    that completes NOTHING — every submission rejected by the bounded
+    queue, plus empty drain ticks — must summarise to finite numbers, not
+    NaN quantiles/ratios over empty windows."""
+    sched = Scheduler(ModelBackend(1, service_ticks=1), max_queue=0)
+    for rid in range(4):
+        assert not sched.submit(_req(rid))
+    summary = sched.metrics.summary()       # zero ticks recorded
+    _assert_nan_free(summary)
+    assert summary["requests_rejected"] == 4
+    assert summary["requests_dropped"] == 4
+    assert summary["latency_p50_ticks"] == 0.0
+    sched.tick()                            # idle tick: still no completions
+    _assert_nan_free(sched.metrics.summary())
+    # the fleet roll-up honours the same contract
+    fm = FleetMetrics(slo_ticks=4)
+    _assert_nan_free(fm.summary())          # empty fleet
+    for rid in range(3):
+        fm.on_result(ServeResult(rid=rid, finish_reason="rejected"))
+    summary = fm.summary()
+    _assert_nan_free(summary)
+    assert summary["slo_attainment"] == 0.0
+    assert summary["requests_lost"] == 0
+
+
+def test_fleet_metrics_classifies_drop_causes_structurally():
+    fm = FleetMetrics(slo_ticks=4)
+    fm.on_result(ServeResult(rid=0, finish_reason="ok", wait_ticks=1,
+                             n_ticks=2))                      # within SLO
+    fm.on_result(ServeResult(rid=1, finish_reason="ok", wait_ticks=9,
+                             n_ticks=2))                      # SLO miss
+    fm.on_result(ServeResult(rid=2, finish_reason="rejected"))
+    fm.on_result(ServeResult(rid=3, finish_reason="expired"))  # n_ticks 0
+    fm.on_result(ServeResult(rid=4, finish_reason="expired", n_ticks=2))
+    assert fm.submitted == 5 and fm.completed == 2 and fm.lost == 0
+    summary = fm.summary()
+    assert summary["drops_by_cause"] == {"rejected": 1,
+                                         "expired_admission": 1,
+                                         "expired_inflight": 1}
+    assert summary["slo_attainment"] == 1 / 5
+
+
+# ---------------------------------------------------------------------------
+# Traffic replay: deterministic under a fixed seed
+# ---------------------------------------------------------------------------
+
+def test_traffic_replay_deterministic_under_fixed_seed():
+    from repro.launch.traffic import calibrate, replay_model
+    cal = calibrate("benchmarks/results/BENCH_serve.json")
+    runs = [replay_model("burst", 1, n_requests=3000, seed=7, cal=cal,
+                         slo_ticks=12, autoscale=True, max_replicas=3)
+            for _ in range(2)]
+    for cell in runs:
+        cell.pop("replay_seconds")          # the only wall-clock field
+    assert runs[0] == runs[1]
+    # burst trace length is sized for the EXPECTED spike mass; a given seed
+    # realises fewer spikes, so only a loose floor is deterministic
+    assert runs[0]["requests_submitted"] >= 3000 * 0.6

@@ -148,11 +148,12 @@ def test_moe_no_drop_when_cf_equals_experts(t, seed):
 @given(st.data())
 def test_scheduler_trace_fifo_within_deadline_no_slot_leak(data):
     """serve v3 scheduler property: random arrival traces — bursts of 1–4B
-    requests, mixed lm/detect lifetimes, deadlines, bounded queue — must
-    admit FIFO-within-deadline, never leak slots, and end with an empty
-    wait queue (checked against the pure-python reference model in
-    tests/test_serve_stream.py; a failing example's trace is printed in
-    the assertion message, and hypothesis shrinks it)."""
+    requests, mixed lm/detect lifetimes, deadlines, priority classes,
+    bounded queue — must admit (priority, deadline, arrival-seq) order,
+    never leak slots, and end with an empty wait queue (checked against the
+    pure-python reference model in tests/test_serve_stream.py; a failing
+    example's trace is printed in the assertion message, and hypothesis
+    shrinks it)."""
     from test_serve_stream import assert_trace_ok
     capacity = data.draw(st.integers(1, 4), label="capacity")
     admit_width = data.draw(st.one_of(st.none(), st.integers(1, capacity)),
@@ -167,13 +168,49 @@ def test_scheduler_trace_fifo_within_deadline_no_slot_leak(data):
                           data.draw(st.sampled_from(["lm", "detect"])),
                           data.draw(st.integers(1, 3)),        # lifetime
                           data.draw(st.one_of(st.none(),
-                                              st.integers(0, 6)))))
+                                              st.integers(0, 6))),
+                          data.draw(st.integers(0, 2))))       # priority
             rid += 1
         trace.append((idle, burst))
     max_queue = data.draw(st.one_of(st.none(),
                                     st.integers(1, 3 * capacity)),
                           label="max_queue")
     assert_trace_ok(capacity, admit_width, trace, max_queue)
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.data())
+def test_fleet_router_conserves_requests_and_replays_deterministically(data):
+    """Fleet property: random arrival traces through a Router (random
+    replica count, queue bound, scripted scale events) — no request lost or
+    duplicated (completed + every drop cause = submitted, each rid surfaces
+    exactly once), scale-down never strands queued or in-flight work, and
+    an identical replay produces the identical result stream (checked
+    against the pure-python fleet reference in tests/test_fleet.py)."""
+    from test_fleet import assert_fleet_trace_ok
+    n_replicas = data.draw(st.integers(1, 3), label="replicas")
+    width = data.draw(st.integers(1, 3), label="width")
+    service = data.draw(st.integers(1, 3), label="service_ticks")
+    max_queue = data.draw(st.one_of(st.none(), st.integers(1, 6)),
+                          label="max_queue")
+    rid = 0
+    trace = []
+    for _ in range(data.draw(st.integers(1, 5), label="n_bursts")):
+        idle = data.draw(st.integers(0, 3))
+        burst = []
+        for _ in range(data.draw(st.integers(0, 4 * width))):
+            burst.append((rid,
+                          data.draw(st.one_of(st.none(),
+                                              st.integers(0, 6))),  # dl
+                          data.draw(st.integers(0, 2))))            # prio
+            rid += 1
+        trace.append((idle, burst))
+    # scripted scale events: (tick, +1|-1) — exercises drain/retire paths
+    scale_script = data.draw(
+        st.lists(st.tuples(st.integers(0, 12), st.sampled_from([+1, -1])),
+                 max_size=3), label="scale_script")
+    assert_fleet_trace_ok(n_replicas, width, service, trace,
+                          max_queue=max_queue, scale_script=dict(scale_script))
 
 
 @settings(deadline=None, max_examples=25)

@@ -70,8 +70,9 @@ def run_trace(capacity, admit_width, trace, max_queue=None):
     """Drive the real Scheduler through an arrival trace.
 
     ``trace`` = [(idle_ticks, burst), ...]; burst = [(rid, kind, life,
-    deadline_ticks), ...]. Checks slot-conservation invariants after every
-    tick; returns ([(rid, finish_reason), ...] in completion order,
+    deadline_ticks), ...] or 5-tuples with a trailing priority (lower
+    admits first; absent = 0). Checks slot-conservation invariants after
+    every tick; returns ([(rid, finish_reason), ...] in completion order,
     admit pages)."""
     backend = LifetimeBackend(capacity, admit_width)
     sched = Scheduler(backend, max_queue=max_queue)
@@ -85,9 +86,10 @@ def run_trace(capacity, admit_width, trace, max_queue=None):
         for _ in range(idle):
             sched.tick()
             check_slots()
-        for rid, kind, life, dl in burst:
+        for rid, kind, life, dl, *rest in burst:
             backend.register(rid, kind, life)
             sched.submit(ServeRequest(rid=rid, deadline_ticks=dl,
+                                      priority=(rest[0] if rest else 0),
                                       sampling=SamplingParams(max_new=life)))
     guard = 0
     while sched.queue or sched.active:
@@ -102,12 +104,14 @@ def run_trace(capacity, admit_width, trace, max_queue=None):
 
 
 def reference_trace(capacity, admit_width, trace, max_queue=None):
-    """Pure-python oracle with the documented semantics: FIFO-within-
-    deadline admission pages (EDF, arrival-seq tie-break), bounded queue
-    rejects at submit, overdue waiters expire at tick start, slots recycle
-    FIFO, completions surface in slot order within a tick."""
+    """Pure-python oracle with the documented semantics: admission pages
+    pop (priority, deadline, arrival-seq) — strict priority classes, EDF
+    with FIFO tie-break within a class — bounded queue rejects at submit,
+    overdue waiters expire at tick start in deadline order regardless of
+    priority, slots recycle FIFO, completions surface in slot order within
+    a tick."""
     width = admit_width or capacity
-    waiting = []                 # (dl, seq, rid) sorted = heap order
+    waiting = []                 # (prio, dl, seq, rid)
     free = list(range(capacity))
     rows = {}                    # slot -> [rid, kind, life_left]
     results, admit_pages = [], []
@@ -116,16 +120,14 @@ def reference_trace(capacity, admit_width, trace, max_queue=None):
 
     def do_tick():
         nonlocal waiting, tick
-        keep = []
-        for dl, s, rid in sorted(waiting):
-            if dl < tick:
-                results.append((rid, "expired"))
-            else:
-                keep.append((dl, s, rid))
-        waiting = keep
+        overdue = sorted((w for w in waiting if w[1] < tick),
+                         key=lambda w: (w[1], w[2]))
+        for _, _, _, rid in overdue:
+            results.append((rid, "expired"))
+        waiting = sorted(w for w in waiting if w[1] >= tick)
         page = []
         while waiting and free and len(page) < width:
-            _, _, rid = waiting.pop(0)
+            _, _, _, rid = waiting.pop(0)
             slot = free.pop(0)
             rows[slot] = [rid, *meta[rid]]
             page.append(rid)
@@ -145,12 +147,13 @@ def reference_trace(capacity, admit_width, trace, max_queue=None):
     for idle, burst in trace:
         for _ in range(idle):
             do_tick()
-        for rid, kind, life, dl in burst:
+        for rid, kind, life, dl, *rest in burst:
             meta[rid] = [kind, life]
             if max_queue is not None and len(waiting) >= max_queue:
                 results.append((rid, "rejected"))
                 continue
-            waiting.append((float("inf") if dl is None else tick + dl,
+            waiting.append((rest[0] if rest else 0,
+                            float("inf") if dl is None else tick + dl,
                             seq, rid))
             seq += 1
     while waiting or rows:
@@ -182,7 +185,8 @@ def _random_trace(rng):
             kind = ["lm", "detect"][int(rng.integers(0, 2))]
             life = int(rng.integers(1, 4))
             dl = None if rng.integers(0, 2) == 0 else int(rng.integers(0, 7))
-            burst.append((rid, kind, life, dl))
+            prio = int(rng.integers(0, 3))
+            burst.append((rid, kind, life, dl, prio))
             rid += 1
         trace.append((idle, burst))
     max_queue = (None if rng.integers(0, 2) == 0
@@ -423,6 +427,36 @@ def test_overlap_served_nms_sets_match_float_reference(served_burst):
                     break
             else:
                 raise AssertionError(f"img {i}: unmatched detection {g}")
+
+
+def test_fleet_router_real_backend_bit_exact(served_burst):
+    """The same burst through a 2-replica fleet (Router + backend.spawn(),
+    replicas sharing the template's compiled executable) must complete the
+    same request-id set with BIT-EXACT detection payloads as the
+    single-scheduler overlap run — routing must never change what a request
+    computes."""
+    from repro.models import yolo
+    from repro.serve.fleet import FleetMetrics, Router
+    params, imgs_u8, runs = served_burst
+    art = yolo.deploy_yolo_kernel(params)
+    template = DetectionBackend(art, slots=WIDTH, overlap=True, max_out=120)
+    template.warmup()                  # one compile covers every spawn()
+    router = Router(template.spawn, replicas=2,
+                    metrics=FleetMetrics(), keep_results=True)
+    results = router.run([ServeRequest(rid=i, image=imgs_u8[i])
+                          for i in range(N_IMGS)])
+    assert router.metrics.lost == 0 and router.metrics.dropped == 0
+    single, _ = runs[True]
+    by_rid = {r.rid: r for r in results}
+    assert sorted(by_rid) == sorted(single) == list(range(N_IMGS))
+    for rid in range(N_IMGS):
+        a, b = single[rid].detections, by_rid[rid].detections
+        for leaf in ("raw", "boxes", "scores", "classes"):
+            assert np.array_equal(a[leaf], b[leaf]), (rid, leaf)
+    # both replicas actually served work (burst >> one replica's admit page)
+    per_replica = router.engine_summaries()
+    assert len(per_replica) == 2
+    assert all(s["requests_completed"] > 0 for s in per_replica.values())
 
 
 def test_fuse_pool_serving_forward_bit_exact(served_burst):
