@@ -59,22 +59,24 @@ REF_REPLICAS = 2          # trace rates are sized against this fleet
 def calibrate(serve_bench: str) -> dict:
     """Replica step-cost model from the committed detect serving record.
 
-    The committed detect config is double-buffered (batch t computes while
-    t+1 stages), so the model replica mirrors it: 2×width slots, width
-    admissions per tick, 2-tick service — steady throughput is width
-    requests per tick and every request's latency includes the overlap
-    pipeline's extra tick, same as the real backend."""
-    width, tick_ms = 2, 200.0
+    The committed detect config runs a K-deep dispatch window (batch t
+    computes while later batches stage), so the model replica mirrors it:
+    depth×width slots, width admissions per tick, 2-tick service — steady
+    throughput is width requests per tick and every request's latency
+    includes the pipeline's extra in-flight ticks, same as the real
+    backend."""
+    width, tick_ms, depth = 2, 200.0, 2
     p = pathlib.Path(serve_bench)
     if p.exists():
         try:
             rec = json.loads(p.read_text()).get("detect", {})
             width = int(rec.get("slots", width))
             tick_ms = float(rec.get("tick_p50_ms", tick_ms))
+            depth = max(int(rec.get("depth", depth)), 1)
         except (json.JSONDecodeError, TypeError, ValueError):
             pass
     return {"width": width, "tick_ms": tick_ms, "service_ticks": 2,
-            "overlap": True, "source": serve_bench}
+            "depth": depth, "source": serve_bench}
 
 
 def gen_trace(kind: str, n_requests: int, ref_rate: float,
@@ -111,9 +113,9 @@ def replay_model(kind: str, n_replicas: int, *, n_requests: int, seed: int,
                                    FleetMetrics, ModelBackend, Router)
 
     width, service = cal["width"], cal["service_ticks"]
-    overlap = bool(cal.get("overlap", False))
+    depth = max(int(cal.get("depth", 2 if cal.get("overlap") else 1)), 1)
     # per-replica steady throughput: capacity / service ticks
-    ref_rate = REF_REPLICAS * (2 * width if overlap else width) / service
+    ref_rate = REF_REPLICAS * depth * width / service
     # str hash is per-process randomized; the trace seed must not be
     rng = np.random.default_rng([seed, TRACES.index(kind)])
     arrivals = gen_trace(kind, n_requests, ref_rate, rng)
@@ -129,7 +131,7 @@ def replay_model(kind: str, n_replicas: int, *, n_requests: int, seed: int,
     metrics = FleetMetrics(slo_ticks=slo_ticks)
     # queue bound sized so waits can overrun the admission deadline: both
     # expiry causes (not just rejection) show up in the drop accounting
-    router = Router(lambda: ModelBackend(width, service, overlap=overlap),
+    router = Router(lambda: ModelBackend(width, service, depth=depth),
                     replicas=n_replicas, max_queue=4 * width * slo_ticks,
                     autoscaler=scaler, metrics=metrics)
     sp = SamplingParams()              # shared: requests carry no LM state
@@ -261,7 +263,7 @@ def run_real(args) -> dict:
         jax.random.PRNGKey(args.seed),
         jnp.asarray(_image(args.seed, 0, size)[None], jnp.float32) / 256.0,
         profile=args.profile)
-    template = DetectionBackend(art, slots=args.slots, overlap=True,
+    template = DetectionBackend(art, slots=args.slots, depth=2,
                                 device_nms=True, profile=args.profile)
     template.warmup()                  # one compile covers every spawn()
 

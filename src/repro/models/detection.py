@@ -11,20 +11,24 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.yolo import GRID, NUM_ANCHORS, NUM_CLASSES
+from repro.models.yolo import NUM_ANCHORS, NUM_CLASSES
 
 # Anchor priors (fraction of image size), 3 anchors for the single 10×10 head.
 ANCHORS = jnp.asarray([[0.12, 0.18], [0.32, 0.42], [0.72, 0.78]], jnp.float32)
 
 
 def decode_head(raw: jax.Array) -> dict:
-    """raw (B, G, G, 75) → boxes (B, G·G·A, 4) cxcywh in [0,1], scores, cls."""
-    b = raw.shape[0]
-    r = raw.reshape(b, GRID, GRID, NUM_ANCHORS, 5 + NUM_CLASSES)
-    cy, cx = jnp.meshgrid(jnp.arange(GRID, dtype=jnp.float32),
-                          jnp.arange(GRID, dtype=jnp.float32), indexing="ij")
-    bx = (jax.nn.sigmoid(r[..., 0]) + cx[None, :, :, None]) / GRID
-    by = (jax.nn.sigmoid(r[..., 1]) + cy[None, :, :, None]) / GRID
+    """raw (B, G, G, 75) → boxes (B, G·G·A, 4) cxcywh in [0,1], scores, cls.
+
+    G is read off the raw head (10 for the deployment 320×320 input; a
+    resolution bucket of side S decodes a G = S/32 grid) — box coordinates
+    stay image-relative fractions, so every bucket shares one decode."""
+    b, grid = raw.shape[0], raw.shape[1]
+    r = raw.reshape(b, grid, grid, NUM_ANCHORS, 5 + NUM_CLASSES)
+    cy, cx = jnp.meshgrid(jnp.arange(grid, dtype=jnp.float32),
+                          jnp.arange(grid, dtype=jnp.float32), indexing="ij")
+    bx = (jax.nn.sigmoid(r[..., 0]) + cx[None, :, :, None]) / grid
+    by = (jax.nn.sigmoid(r[..., 1]) + cy[None, :, :, None]) / grid
     bw = ANCHORS[None, None, None, :, 0] * jnp.exp(jnp.clip(r[..., 2], -8, 8))
     bh = ANCHORS[None, None, None, :, 1] * jnp.exp(jnp.clip(r[..., 3], -8, 8))
     obj = jax.nn.sigmoid(r[..., 4])

@@ -88,9 +88,15 @@ def count_params() -> dict:
     return {"weights": weights, "biases": biases, "total": weights + biases}
 
 
-def spatial_sizes() -> dict:
-    """Input H=W per layer (Table 2 progression)."""
-    sizes, h = {}, INPUT_SIZE
+def spatial_sizes(input_size: int = INPUT_SIZE) -> dict:
+    """Input H=W per layer (Table 2 progression) for one resolution bucket.
+
+    Any multiple of 32 (= 2^5, one halving per pool) keeps every pooled
+    plane even, so the same layer stack serves 256/320/416/... buckets."""
+    if input_size <= 0 or input_size % 32:
+        raise ValueError(f"input size must be a positive multiple of 32 "
+                         f"(5 pools), got {input_size}")
+    sizes, h = {}, input_size
     for s in YOLO_LAYERS:
         sizes[s.name] = h
         if s.pool:
@@ -382,10 +388,11 @@ def deploy_yolo_kernel(params: dict) -> dict:
 
 def build_detector(key: jax.Array, calib_images: jax.Array, *,
                    per_channel: bool = None,
-                   profile: str = None) -> tuple:
+                   profile: str = None,
+                   buckets=None) -> tuple:
     """Init + range-calibrate + pack: the serving-deployment recipe.
 
-    calib_images (B, 320, 320, 3) float in [0, 1]. Returns
+    calib_images (B, S, S, 3) float in [0, 1]. Returns
     (calibrated float params, deploy_yolo_kernel artifact) — the float
     params stay the verification oracle for the packed path
     (core.verify, DESIGN.md §10). ``per_channel=False`` calibrates
@@ -394,14 +401,28 @@ def build_detector(key: jax.Array, calib_images: jax.Array, *,
     ``"tuned"`` defaults ``per_channel=False`` so the autotuned popcount
     configs are eligible at serve time; other profiles keep the
     per-channel default.
+
+    ``buckets`` declares the resolution buckets (image sides, each a
+    multiple of 32) this artifact will serve, e.g. ``(256, 320, 416)``.
+    The packed weights are resolution-independent — the buckets are
+    recorded on the artifact (``art["buckets"]``) so `DetectionBackend`
+    compiles one fixed-width executable per bucket, all sharing these
+    weights. Default: the calibration image size.
     """
     if profile is not None and profile not in PROFILES:
         raise ValueError(f"profile must be one of {PROFILES}, got {profile!r}")
     if per_channel is None:
         per_channel = profile != "tuned"
+    if buckets is None:
+        buckets = (int(calib_images.shape[1]),)
+    buckets = tuple(dict.fromkeys(int(b) for b in buckets))
+    for b in buckets:
+        spatial_sizes(b)                 # validates the ×32 constraint
     params = init_yolo_params(key)
     params = calibrate_yolo(params, calib_images, per_channel=per_channel)
-    return params, deploy_yolo_kernel(params)
+    art = deploy_yolo_kernel(params)
+    art["buckets"] = buckets
+    return params, art
 
 
 def art_uniform_steps(art: dict) -> bool:
@@ -482,7 +503,10 @@ def yolo_forward_kernel(art: dict, images: jax.Array, *,
                         interpret: bool = None,
                         fuse_pool: bool = None,
                         accum: str = None) -> jax.Array:
-    """Pallas streaming path. images (B,320,320,3) in [0,1] → (B,10,10,75) f32.
+    """Pallas streaming path. images (B,S,S,3) in [0,1] → (B,S/32,S/32,75)
+    f32, for any bucket size S that is a multiple of 32 (default deployment
+    S=320 → 10×10 grid). The layer stack, packed weights and per-layer
+    configs are resolution-independent; only the spatial plan varies.
 
     Inter-layer tensors are uint8-code QTensors (requantized in each
     kernel's epilogue) — HBM activation traffic is 1 byte/elem, the
@@ -525,7 +549,7 @@ def yolo_forward_kernel(art: dict, images: jax.Array, *,
                     f"{entry['spec'].name} is per-channel calibrated — "
                     f"use build_detector(per_channel=False)")
     table = _cfg.load_table() if profile == "tuned" else None
-    sizes = spatial_sizes()
+    sizes = spatial_sizes(images.shape[1])          # static under jit
     batch = images.shape[0]
     # conv1 (std, fixed-point-rounded weights) in f32, then quantize to codes.
     w1 = fxp.CONV1_W.roundtrip(layers[0]["w"])

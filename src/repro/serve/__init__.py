@@ -1,12 +1,16 @@
-"""Serving stack (v2): one backend-agnostic request lifecycle for LM decode
+"""Serving stack (v3): one backend-agnostic request lifecycle for LM decode
 and W1A8 detection — `ServeRequest` → `Scheduler` → `Backend`
-(admit / step / harvest) → `ServeResult`. Ring-aware caches, batched
-multi-row prefill, packed-W1A8 deployment, SP long-context attention.
-DESIGN.md §10."""
-from repro.serve.api import (Backend, Emission,  # noqa: F401
+(admit / step / harvest) → `ServeResult`. K-deep dispatch windows, bucketed
+multi-resolution admission, ring-aware caches, batched multi-row prefill,
+packed-W1A8 deployment, SP long-context attention, detect→LM composition.
+DESIGN.md §10–§11, §15."""
+from repro.serve.api import (EMISSION_KINDS, Backend, Emission,  # noqa: F401
                              EngineMetrics, SamplingParams, ServeRequest,
                              ServeResult)
-from repro.serve.backends import DetectionBackend, LMBackend  # noqa: F401
+from repro.serve.backends import (DetectionBackend,  # noqa: F401
+                                  DispatchWindow, LMBackend)
+from repro.serve.compose import (ComposePipeline, ComposeRequest,  # noqa: F401
+                                 ComposeResult, detections_to_prompt)
 from repro.serve.cache import cache_bytes, init_cache, merge_rows  # noqa: F401
 from repro.serve.engine import (decode_step, generate,  # noqa: F401
                                 prefill)

@@ -56,6 +56,11 @@ class ServeRequest:
     rid: int
     prompt: Optional[Sequence[int]] = None      # LM workloads
     image: Optional[Any] = None                 # detection workloads
+    # Static image geometry (H, W, C) — the bucketed multi-resolution
+    # scheduler packs per-bucket batches off this field WITHOUT touching
+    # the (possibly device-resident) pixels. Auto-filled from `image` at
+    # construction when omitted.
+    image_shape: Optional[Tuple[int, ...]] = None
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     # Admission deadline, in scheduler ticks from submission: the request
     # must reach a pool slot within this many ticks or it expires in the
@@ -71,6 +76,10 @@ class ServeRequest:
     # FIFO tie-break. Default 0 keeps pre-priority traffic byte-identical.
     priority: int = 0
 
+    def __post_init__(self) -> None:
+        if self.image_shape is None and self.image is not None:
+            self.image_shape = tuple(int(d) for d in np.shape(self.image))
+
 
 @dataclasses.dataclass
 class ServeResult:
@@ -83,22 +92,41 @@ class ServeResult:
     deadline_met: Optional[bool] = None         # None when no deadline was set
 
 
+# The emission payload union — one `kind` tag per wire variant instead of
+# parallel optional attributes (DESIGN.md §15):
+#   "token"       payload: int            one host-checked LM decode token
+#   "tokens"      payload: Tuple[int,...] bulk sequence (device done-mask)
+#   "raw_head"    payload: dict           raw (G,G,75) head + NMS'd dets
+#   "detections"  payload: dict           compact device-NMS detection set
+#   "compose"     payload: dict           detect→LM hand-off (serve.compose)
+EMISSION_KINDS = ("token", "tokens", "raw_head", "detections", "compose")
+
+
 @dataclasses.dataclass
 class Emission:
-    """One unit of backend output for a slot.
+    """One unit of backend output for a slot: a `kind` tag plus the typed
+    `payload` for that kind (see EMISSION_KINDS above).
 
-    Host-side-checked LM decode emits one `token` per tick; detection emits
-    a final `payload`. A device-side-done backend instead emits nothing per
-    tick and, when its done-mask lights up, one **bulk** emission carrying
-    the whole `tokens` sequence plus the backend-decided `finish` reason —
-    the async emission state of the streaming path (DESIGN.md §11).
+    Host-side-checked LM decode emits one ``kind="token"`` per tick; a
+    device-side-done backend instead emits nothing per tick and, when its
+    done-mask lights up, one **bulk** ``kind="tokens"`` emission carrying
+    the whole sequence plus the backend-decided `finish` reason — the async
+    emission state of the streaming path (DESIGN.md §11). Detection emits a
+    final ``"raw_head"`` (verification wire) or ``"detections"`` (compact
+    device-NMS wire) payload dict — the dict is the wire format, so fleet
+    bit-exactness checks compare it structurally, unchanged by this tag.
     `final=True` completes the request regardless of its sampling params.
     """
-    token: Optional[int] = None
-    payload: Optional[dict] = None
-    tokens: Optional[Tuple[int, ...]] = None    # bulk (device-side done-mask)
+    kind: str = "token"
+    payload: Any = None
     finish: Optional[str] = None                # backend-decided reason
     final: bool = False
+
+    def __post_init__(self) -> None:
+        if self.kind not in EMISSION_KINDS:
+            raise ValueError(
+                f"Emission.kind must be one of {EMISSION_KINDS}, "
+                f"got {self.kind!r}")
 
 
 class Backend(Protocol):

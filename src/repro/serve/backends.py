@@ -15,15 +15,18 @@ temperature sampling. Two termination paths:
     slot finishes. Token-for-token equivalent to the host path (same
     sampler expressions, same PRNG-key discipline).
 
-`DetectionBackend` — the paper's deployed workload: batched 320×320 image
-requests through the packed-W1A8 Pallas conv path + head decode + NMS,
-bundled into ONE fixed-width jitted dispatch. With ``overlap=True`` the
-backend double-buffers like the FPGA pipeline overlaps line-buffered conv
-with ingest: tick t's batch is *dispatched* asynchronously and harvested at
-tick t+1, so next-tick admission (host-side image staging, slot assignment)
-and even the next dispatch overlap device compute. The slot pool doubles
-(capacity = 2·width, admit_width = width) so a full batch can stage while
-another is in flight — steady state stays one batch per tick.
+`DetectionBackend` — the paper's deployed workload: batched image requests
+through the packed-W1A8 Pallas conv path + head decode + NMS, bundled into
+ONE fixed-width jitted dispatch per resolution bucket. With ``depth=K`` the
+backend keeps a K-deep in-flight dispatch window, generalizing how the FPGA
+pipeline overlaps line-buffered conv with ingest: tick t's batch is
+*dispatched* asynchronously and harvested up to K-1 ticks later — strictly
+in dispatch order even when K>2 executables are in flight (completion
+reordering via `DispatchWindow`) — so admission (host-side image staging,
+slot assignment) and the next K-1 dispatches overlap device compute. The
+slot pool widens (capacity = (K-1+buckets)·width, admit_width =
+buckets·width) so full batches can stage while others are in flight —
+steady state stays one batch per bucket per tick.
 """
 from __future__ import annotations
 
@@ -55,6 +58,75 @@ def _warn_detect_kwargs_once() -> None:
         "DetectionBackend(interpret=/fuse_pool=) is deprecated; pass "
         "profile='tuned'|'default'|'interpret' instead",
         DeprecationWarning, stacklevel=3)
+
+
+# The retired overlap flag warns exactly once per process (same pattern);
+# tests reset this to re-arm the warning.
+_detect_overlap_warned = False
+
+
+def _warn_detect_overlap_once() -> None:
+    global _detect_overlap_warned
+    if _detect_overlap_warned:
+        return
+    _detect_overlap_warned = True
+    import warnings
+    warnings.warn(
+        "DetectionBackend(overlap=) is deprecated; pass depth=K instead "
+        "(overlap=True maps to depth=2, overlap=False to depth=1)",
+        DeprecationWarning, stacklevel=3)
+
+
+class DispatchWindow:
+    """K-deep in-flight dispatch window with completion reordering.
+
+    Batches push in dispatch order (each push takes a monotonically
+    increasing ticket) and pop strictly in that order — an executable that
+    finishes early still waits behind older in-flight work, so results
+    surface to the scheduler in dispatch order regardless of completion
+    order. `pop_due` implements the two-rule harvest schedule shared with
+    the pure-python oracle in tests/test_serve_kdeep.py:
+
+      * depth rule — after a tick's dispatches, at most ``depth - 1``
+        batches stay resident; the oldest surplus batches block (harvest)
+        now. depth=1 is single-shot (dispatch and block same tick);
+        depth=2 is the classic double buffer.
+      * drain rule — a tick that dispatched nothing harvests exactly one
+        resident batch, so a drained queue surfaces trailing results one
+        batch per tick (the double buffer's +1 drain tick, generalized).
+    """
+
+    def __init__(self, depth: int):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self.depth = int(depth)
+        self._q: collections.deque = collections.deque()
+        self._tickets = 0
+        self._harvested = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def push(self, item) -> int:
+        ticket = self._tickets
+        self._tickets += 1
+        self._q.append((ticket, item))
+        return ticket
+
+    def pop_due(self, *, pushed: bool) -> list:
+        due = []
+        if not pushed and self._q:                 # drain rule
+            due.append(self._pop())
+        while len(self._q) >= self.depth:          # depth rule
+            due.append(self._pop())
+        return due
+
+    def _pop(self):
+        ticket, item = self._q.popleft()
+        assert ticket == self._harvested, \
+            "harvest must follow dispatch order"
+        self._harvested = ticket + 1
+        return item
 
 
 class LMBackend:
@@ -120,7 +192,8 @@ class LMBackend:
                 if self.done_mask:
                     self._admit_done_mask(slot, req, tok)
                 else:
-                    self._emissions[slot].append(Emission(token=tok))
+                    self._emissions[slot].append(
+                        Emission(kind="token", payload=tok))
 
     def _admit_done_mask(self, slot: int, req: ServeRequest,
                          tok: int) -> None:
@@ -162,7 +235,8 @@ class LMBackend:
         self.host_sync_bytes += 4 * self.capacity      # (B,) int32 tokens
         self.last_tok = jnp.asarray(nxt, jnp.int32)
         for slot in np.flatnonzero(self._active):
-            self._emissions[int(slot)].append(Emission(token=int(nxt[slot])))
+            self._emissions[int(slot)].append(
+                Emission(kind="token", payload=int(nxt[slot])))
 
     def _step_done_mask(self) -> None:
         use_key = bool((self.temp > 0).any())          # same rule as _sample
@@ -202,7 +276,8 @@ class LMBackend:
                 seq = tuple(int(t) for t in toks[i, :n])
                 reason = ("stop" if seq and seq[-1]
                           in self._stops_host.get(slot, ()) else "length")
-                out[slot] = [Emission(tokens=seq, finish=reason, final=True)]
+                out[slot] = [Emission(kind="tokens", payload=seq,
+                                      finish=reason, final=True)]
         return out
 
     def release(self, slot: int) -> None:
@@ -231,14 +306,20 @@ class DetectionBackend:
     """Packed-W1A8 YOLO detection backend (one image per request).
 
     ``art`` is a `models.yolo.deploy_yolo_kernel` artifact; images are
-    (320, 320, 3) float in [0, 1] or uint8 raw pixels (divided by 256, the
-    Q0.8 convention). Emissions carry NMS'd detections plus the raw head
-    for verification against the float reference (core.verify).
+    (S, S, 3) float in [0, 1] or uint8 raw pixels (divided by 256, the
+    Q0.8 convention), where S is one of the configured resolution
+    ``buckets`` (default: the artifact's buckets, else 320). Emissions
+    carry NMS'd detections plus the raw head for verification against the
+    float reference (core.verify).
 
     The forward (Pallas convs → head decode → NMS) is ONE jitted dispatch
-    at a fixed batch width (= ``slots``); partial batches zero-pad so every
-    tick reuses the same executable. ``overlap=True`` double-buffers:
-    dispatch tick t's batch, harvest it at t+1 (see module docstring).
+    at a fixed batch width (= ``slots``) **per bucket** — all buckets share
+    the packed weights and the jit cache holds one fixed-width executable
+    per image size, the way `spawn()` shares one executable across
+    replicas. Partial batches zero-pad so every tick reuses the same
+    executable. ``depth=K`` keeps up to K dispatches in flight, harvested
+    strictly in dispatch order (see module docstring / `DispatchWindow`);
+    ``depth=2`` is the retired ``overlap=True`` double buffer.
 
     Kernel launch configuration comes from ``profile``
     (`models.yolo.PROFILES`): ``"tuned"`` — the serving default — resolves
@@ -259,15 +340,17 @@ class DetectionBackend:
     device→host payload ~56× for the default head geometry.
 
     Host-sync accounting: the per-dispatch payload is STATIC (fixed-width
-    executable ⇒ `jax.eval_shape` at construction), so syncs and bytes are
-    credited at the tick that *dispatches* a batch, not the tick whose
-    harvest happens to block on it. Overlap mode therefore shows the same
-    per-tick byte attribution as single-shot (its extra drain tick costs 0)
-    instead of charging tick t with tick t−1's bytes.
+    executable per bucket ⇒ `jax.eval_shape` at construction), so syncs and
+    bytes are credited at the tick that *dispatches* a batch, not the tick
+    whose harvest happens to block on it. K-deep mode therefore shows the
+    same per-tick byte attribution as single-shot (its extra drain ticks
+    cost 0) instead of charging tick t with an older tick's bytes.
     """
 
     def __init__(self, art: dict, *, slots: int = 4, profile: str = None,
-                 overlap: bool = False, device_nms: bool = False,
+                 depth: Optional[int] = None, overlap=_UNSET,
+                 device_nms: bool = False,
+                 buckets: Optional[Sequence[int]] = None,
                  iou_thresh: float = 0.45, score_thresh: float = 0.25,
                  max_out: int = 50, interpret=_UNSET, fuse_pool=_UNSET):
         from repro.models import detection, yolo
@@ -282,27 +365,46 @@ class DetectionBackend:
                 overrides["interpret"] = interpret
             if fuse_pool is not _UNSET:
                 overrides["fuse_pool"] = fuse_pool
+        if overlap is not _UNSET:
+            if depth is not None:
+                raise TypeError("pass either depth= or the legacy overlap= "
+                                "flag, not both")
+            _warn_detect_overlap_once()
+            depth = 2 if overlap else 1
+        if depth is None:
+            depth = 1
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
         if profile is None:
             profile = "tuned"
         if profile not in yolo.PROFILES:
             raise ValueError(
                 f"profile must be one of {yolo.PROFILES}, got {profile!r}")
+        if buckets is None:
+            buckets = art.get("buckets") or (yolo.INPUT_SIZE,)
+        self.buckets = tuple(dict.fromkeys(int(b) for b in buckets))
+        for b in self.buckets:
+            if b <= 0 or b % 32:
+                raise ValueError(f"bucket sizes must be positive multiples "
+                                 f"of 32 (5 pools), got {b}")
         self.art = art
         self.width = slots                        # device batch per dispatch
-        self.overlap = overlap
-        self.capacity = 2 * slots if overlap else slots
-        self.admit_width = slots
+        self.depth = depth                        # K-deep dispatch window
+        self.capacity = (depth - 1 + len(self.buckets)) * slots
+        self.admit_width = len(self.buckets) * slots
+        self.bucket_admit_width = slots           # per-bucket page per tick
         self.profile = profile
         self.device_nms = device_nms
         self.post = dict(iou_thresh=iou_thresh, score_thresh=score_thresh,
                          max_out=max_out)
-        self._staged: List[Tuple[int, ServeRequest]] = []
-        self._inflight: Optional[tuple] = None    # (slots, device results)
+        # per-bucket staging (insertion-ordered: dispatch order is the
+        # order buckets first staged this tick)
+        self._staged: Dict[int, List[Tuple[int, ServeRequest]]] = {}
+        self._window = DispatchWindow(depth)
         self._emissions: Dict[int, List[Emission]] = {}
         self.host_syncs = 0
         self.host_sync_bytes = 0
         self.completion_syncs = 0
-        self._input_size = yolo.INPUT_SIZE
 
         def _bundle(imgs):
             raw = yolo.yolo_forward_kernel(art, imgs, profile=profile,
@@ -313,64 +415,92 @@ class DetectionBackend:
                                                               classes)
             return raw, boxes, scores, classes
 
+        # ONE jit, traced once per bucket shape: the jit cache is the
+        # per-bucket executable table, and every executable closes over the
+        # same packed weights (no per-bucket model fork)
         self._fwd = jax.jit(_bundle)
-        # the dispatch payload is static — one fixed-width executable — so
-        # its byte cost is known without transferring anything
-        spec = jax.ShapeDtypeStruct(
-            (self.width, self._input_size, self._input_size, 3), jnp.float32)
-        self._batch_bytes = sum(
-            int(np.prod(o.shape)) * o.dtype.itemsize
-            for o in jax.tree_util.tree_leaves(jax.eval_shape(self._fwd,
-                                                              spec)))
+        # the dispatch payload is static — one fixed-width executable per
+        # bucket — so its byte cost is known without transferring anything
+        self._batch_bytes = {
+            b: sum(int(np.prod(o.shape)) * o.dtype.itemsize
+                   for o in jax.tree_util.tree_leaves(jax.eval_shape(
+                       self._fwd, jax.ShapeDtypeStruct(
+                           (self.width, b, b, 3), jnp.float32))))
+            for b in self.buckets}
 
-    def spawn(self) -> "DetectionBackend":
+    def spawn(self, *, depth: Optional[int] = None) -> "DetectionBackend":
         """Fresh replica of this backend for the fleet router: independent
         slot/emission/sync state, SHARING the compiled fixed-width
         executable (the program is stateless; the pool is not). One
         warmup() on the template covers every spawned replica, so router
-        scale-up costs no recompile."""
+        scale-up costs no recompile. ``depth`` re-sizes the replica's
+        dispatch window (and slot pool) without recompiling — how the
+        BENCH_serve K-saturation sweep reuses one executable across K."""
         import copy
         twin = copy.copy(self)
-        twin._staged = []
-        twin._inflight = None
+        if depth is not None:
+            if depth < 1:
+                raise ValueError(f"depth must be >= 1, got {depth}")
+            twin.depth = int(depth)
+            twin.capacity = (twin.depth - 1 + len(self.buckets)) * self.width
+        twin._staged = {}
+        twin._window = DispatchWindow(twin.depth)
         twin._emissions = {}
         twin.host_syncs = 0
         twin.host_sync_bytes = 0
         twin.completion_syncs = 0
         return twin
 
+    def bucket_of(self, req: ServeRequest) -> int:
+        """Resolution bucket (= image side S) for a request — the scheduler
+        packs per-bucket batches off this, the router depth-accounts on it.
+        Reads only the static `image_shape`, never the pixels."""
+        shape = getattr(req, "image_shape", None)
+        if shape is None and req.image is not None:
+            shape = np.shape(req.image)
+        if not shape:
+            raise ValueError(f"request {req.rid}: detection needs an image")
+        size = int(shape[0])
+        if size not in self._batch_bytes:
+            raise ValueError(
+                f"request {req.rid}: image size {size} matches no "
+                f"configured bucket {self.buckets}")
+        return size
+
     def warmup(self) -> None:
-        """Compile + run the fixed-width bundle once so serving ticks (and
-        the overlap-on/off comparison in BENCH_serve) exclude trace time."""
-        z = jnp.zeros((self.width, self._input_size, self._input_size, 3),
-                      jnp.float32)
-        jax.block_until_ready(self._fwd(z))
+        """Compile + run every bucket's fixed-width bundle once so serving
+        ticks (and the per-K comparison in BENCH_serve) exclude trace
+        time."""
+        for b in self.buckets:
+            z = jnp.zeros((self.width, b, b, 3), jnp.float32)
+            jax.block_until_ready(self._fwd(z))
 
     def admit(self, assignments: Sequence[Tuple[int, ServeRequest]]) -> None:
-        self._staged.extend(assignments)
+        for slot, req in assignments:
+            self._staged.setdefault(self.bucket_of(req), []).append(
+                (slot, req))
 
     def step(self) -> None:
-        newly = None
-        if self._staged:
-            imgs = jnp.stack([self._to_float(r.image)
-                              for _, r in self._staged])
+        staged, self._staged = self._staged, {}
+        pushed = 0
+        for bucket, group in staged.items():
+            imgs = jnp.stack([self._to_float(r.image) for _, r in group])
             if imgs.shape[0] < self.width:       # fixed-width executable
                 imgs = jnp.pad(imgs, ((0, self.width - imgs.shape[0]),
                                       (0, 0), (0, 0), (0, 0)))
-            newly = ([slot for slot, _ in self._staged],
-                     self._fwd(imgs))            # async dispatch
-            self._staged = []
+            self._window.push(([slot for slot, _ in group],
+                               self._fwd(imgs)))  # async dispatch
+            pushed += 1
             # credit the transfer to the tick that dispatched the batch —
             # the payload width is static, the harvest tick is a schedule
-            # detail (overlap blocks one tick later; the bytes are the same)
+            # detail (a K-deep window blocks up to K-1 ticks later; the
+            # bytes are the same)
             self.host_syncs += 1
-            self.host_sync_bytes += self._batch_bytes
-        if self.overlap:
-            prev, self._inflight = self._inflight, newly
-            if prev is not None:                 # harvest tick t-1's batch
-                self._emit(prev)
-        elif newly is not None:                  # single-shot: block now
-            self._emit(newly)
+            self.host_sync_bytes += self._batch_bytes[bucket]
+        # harvest in dispatch order: everything beyond depth-1 resident
+        # batches, or one batch on a drain (no-dispatch) tick
+        for inflight in self._window.pop_due(pushed=bool(pushed)):
+            self._emit(inflight)
 
     def _emit(self, inflight: tuple) -> None:
         slots_, results = inflight
@@ -384,7 +514,7 @@ class DetectionBackend:
                            "classes": np.asarray(classes[i], np.int32),
                            "valid": int(valid[i])}
                 self._emissions.setdefault(slot, []).append(
-                    Emission(payload=payload, final=True))
+                    Emission(kind="detections", payload=payload, final=True))
             return
         raw, boxes, scores, classes = jax.device_get(results)  # one transfer
         for i, slot in enumerate(slots_):
@@ -393,7 +523,7 @@ class DetectionBackend:
                        "classes": np.asarray(classes[i]),
                        "raw": np.asarray(raw[i])}
             self._emissions.setdefault(slot, []).append(
-                Emission(payload=payload, final=True))
+                Emission(kind="raw_head", payload=payload, final=True))
 
     def harvest(self) -> Dict[int, List[Emission]]:
         out, self._emissions = self._emissions, {}

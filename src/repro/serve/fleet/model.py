@@ -4,10 +4,11 @@ A jax-free stand-in for DetectionBackend with the same scheduler-visible
 contract (capacity / admit_width / admit / step / harvest / release): a
 fixed device batch width, every admitted request completing
 ``service_ticks`` after admission with one final payload emission. With
-``overlap=True`` it mirrors the double-buffered DetectionBackend: 2×width
-slots but width admissions per tick, so batch t computes while batch t+1
-stages — steady-state throughput is ``overlap_factor·width/service_ticks``
-requests per tick. One tick of this backend models one fixed-width detector
+``depth=K`` it mirrors the K-deep DetectionBackend pool sizing: K×width
+slots but width admissions per tick, so batch t computes while the next
+batches stage — steady-state throughput is ``depth_factor·width/
+service_ticks`` requests per tick. (``overlap=True`` is the retired
+spelling of ``depth=2``.) One tick of this backend models one fixed-width detector
 dispatch whose wall cost is carried OUT of band (`tick_ms`, calibrated from
 the committed BENCH_serve.json detect record) — so a million-request
 traffic replay runs at pure-python speed while SLO accounting stays in
@@ -22,8 +23,12 @@ from repro.serve.api import Emission, ServeRequest
 
 class ModelBackend:
     def __init__(self, width: int = 2, service_ticks: int = 1,
-                 tick_ms: float = 0.0, overlap: bool = False):
-        self.capacity = 2 * width if overlap else width
+                 tick_ms: float = 0.0, overlap: bool = False,
+                 depth: int = None):
+        if depth is None:
+            depth = 2 if overlap else 1
+        self.depth = max(int(depth), 1)
+        self.capacity = self.depth * width
         self.admit_width = width
         self.service_ticks = max(int(service_ticks), 1)
         self.tick_ms = float(tick_ms)      # modeled wall cost per tick
@@ -39,7 +44,7 @@ class ModelBackend:
             self._rows[slot] -= 1
             if self._rows[slot] <= 0:
                 self._ems.setdefault(slot, []).append(
-                    Emission(payload=None, final=True))
+                    Emission(kind="detections", payload=None, final=True))
 
     def harvest(self) -> Dict[int, List[Emission]]:
         out, self._ems = self._ems, {}

@@ -99,17 +99,28 @@ class Router:
         return sum(len(r.sched.active) for r in self.replicas.values())
 
     # -- dispatch ------------------------------------------------------------
-    def _route_key(self, rep: Replica):
+    def _route_key(self, rep: Replica, req: Optional[ServeRequest] = None):
         # least queue depth; tie-break toward most deadline slack (earliest
         # queued deadline furthest in the future), then replica id. Slack is
         # measured against the REPLICA's tick clock: deadlines are absolute
         # in each scheduler's local time, and a replica spawned at fleet
         # tick t runs t ticks behind the fleet clock.
+        #
+        # Per-bucket depth accounting: when the replica serves a bucketed
+        # backend (multi-resolution detection), the PRIMARY depth signal is
+        # the queue depth in THIS request's bucket — a replica drowning in
+        # 320s is still the right home for a 256 if its 256 page is idle.
+        # The global depth stays as the next key, so non-bucketed backends
+        # order exactly as before ((queued, queued, -slack, rid)).
+        depth = rep.sched.queued
+        bucket_of = getattr(rep.sched.backend, "bucket_of", None)
+        if req is not None and bucket_of is not None:
+            depth = rep.sched.queued_in_bucket(bucket_of(req))
         slack = rep.sched.earliest_deadline() - rep.sched.metrics.ticks
-        return (rep.sched.queued, -slack, rep.rid)
+        return (depth, rep.sched.queued, -slack, rep.rid)
 
     def submit(self, req: ServeRequest) -> bool:
-        target = min(self.live(), key=self._route_key)
+        target = min(self.live(), key=lambda rep: self._route_key(rep, req))
         return target.sched.submit(req)
 
     # -- one fleet tick ------------------------------------------------------

@@ -1,11 +1,13 @@
 """Request scheduler — paged admission, deadlines, priorities, metrics.
 
 One `tick` = admit (expire overdue waiters, then fill free slots from the
-bounded wait queue — at most `backend.admit_width` requests, one batched
-backend.admit call) → backend.step (one fused compute tick; a streaming
-backend dispatches tick t here and surfaces its results at tick t+1) →
-harvest (ingest emissions in order, finish requests on stop-token / max_new
-/ final-payload / bulk finish, drop in-flight work that overran its
+bounded wait queue — at most `backend.admit_width` requests globally and
+`backend.bucket_admit_width` per resolution bucket, one batched
+backend.admit call) → backend.step (one fused compute tick; a K-deep
+streaming backend dispatches tick t here and surfaces its results up to
+K-1 ticks later, in dispatch order) → harvest (ingest kind-tagged
+emissions in order, finish requests on stop-token / max_new /
+final-payload / bulk finish, drop in-flight work that overran its
 completion deadline, recycle slots).
 
 Admission order is **(priority, deadline, arrival-seq)**: the queue pops the
@@ -39,6 +41,7 @@ Invariants:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import heapq
 import time
@@ -93,6 +96,16 @@ class Scheduler:
     def queued(self) -> int:
         """Live wait-queue depth (stale heap entries excluded)."""
         return len(self._waiting)
+
+    def queued_in_bucket(self, bucket) -> int:
+        """Live wait-queue depth restricted to one resolution bucket — the
+        fleet router's per-bucket depth signal. Falls back to the global
+        depth when the backend is not bucketed."""
+        bucket_of = getattr(self.backend, "bucket_of", None)
+        if bucket_of is None:
+            return len(self._waiting)
+        return sum(1 for req, _ in self._waiting.values()
+                   if bucket_of(req) == bucket)
 
     def earliest_deadline(self) -> float:
         """Earliest absolute admission deadline still waiting (inf when the
@@ -152,16 +165,29 @@ class Scheduler:
 
     def admit(self) -> int:
         """Fill free slots from the wait queue — at most `admit_width`
-        requests (paged admission; a double-buffered backend keeps its
-        device batch width while holding 2× slots) — in one batched
-        backend.admit call. Returns the number admitted."""
+        requests (paged admission; a K-deep backend keeps its device batch
+        width while holding (K-1+buckets)× slots) — in one batched
+        backend.admit call. Returns the number admitted.
+
+        Per-bucket accounting: a bucketed backend (one exposing
+        ``bucket_of`` + ``bucket_admit_width``) admits at most
+        ``bucket_admit_width`` requests *per bucket* per tick. A request
+        whose bucket page is already full this tick is DEFERRED — left
+        waiting, re-pushed with its original heap key — instead of ending
+        the scan, so a starved bucket is never silently blocked behind a
+        full sibling bucket (tests/test_serve_kdeep.py regression)."""
         self._expire_overdue()
         width = getattr(self.backend, "admit_width", None) \
             or self.backend.capacity
+        bucket_of = getattr(self.backend, "bucket_of", None)
+        bucket_width = getattr(self.backend, "bucket_admit_width", None)
+        per_bucket: collections.Counter = collections.Counter()
+        deferred: List[tuple] = []
         batch = []
-        while self._waiting and self.free and len(batch) < width:
-            _, _, seq = heapq.heappop(self.queue)
-            entry = self._waiting.pop(seq, None)
+        while self.queue and self.free and len(batch) < width:
+            item = heapq.heappop(self.queue)
+            seq = item[2]
+            entry = self._waiting.get(seq)
             if entry is None:                      # stale (expired) entry
                 continue
             req, submitted = entry
@@ -170,18 +196,28 @@ class Scheduler:
             if complete_by < self.metrics.ticks:
                 # completion already impossible (even a 1-tick service
                 # misses): expire from the queue instead of burning a slot
+                del self._waiting[seq]
                 self.metrics.expired += 1
                 self._emit_result(ServeResult(
                     rid=req.rid, finish_reason="expired",
                     wait_ticks=self.metrics.ticks - submitted,
                     deadline_met=False))
                 continue
+            if bucket_of is not None and bucket_width:
+                b = bucket_of(req)
+                if per_bucket[b] >= bucket_width:
+                    deferred.append(item)          # full page: bucket waits,
+                    continue                       # siblings keep admitting
+                per_bucket[b] += 1
+            del self._waiting[seq]
             slot = self.free.pop(0)
             batch.append((slot, req))
             self.active[slot] = _Active(
                 req, admitted_tick=self.metrics.ticks,
                 wait_ticks=self.metrics.ticks - submitted,
                 complete_by=complete_by)
+        for item in deferred:                      # original keys: ordering
+            heapq.heappush(self.queue, item)       # is stable across ticks
         if batch:
             self.backend.admit(batch)
         return len(batch)
@@ -201,22 +237,25 @@ class Scheduler:
                 continue
             finish = None
             for em in ems:
-                if em.tokens is not None:       # bulk (device-side done-mask)
-                    rec.tokens.extend(int(t) for t in em.tokens)
-                    tokens += len(em.tokens)
+                if em.kind == "tokens":         # bulk (device-side done-mask)
+                    rec.tokens.extend(int(t) for t in em.payload)
+                    tokens += len(em.payload)
                     if em.final:
                         finish = em.finish or "ok"
                         break
                     continue
-                if em.final:
-                    rec.payload = em.payload
-                    images += 1
-                    finish = em.finish or "ok"
-                    break
-                rec.tokens.append(int(em.token))
+                if em.kind != "token":          # payload wire (raw_head /
+                    if em.final:                # detections / compose)
+                        rec.payload = em.payload
+                        images += 1
+                        finish = em.finish or "ok"
+                        break
+                    continue
+                tok = int(em.payload)
+                rec.tokens.append(tok)
                 tokens += 1
                 sp = rec.req.sampling
-                if em.token in sp.stop_tokens:
+                if tok in sp.stop_tokens:
                     finish = "stop"
                     break
                 if len(rec.tokens) >= sp.max_new:

@@ -165,7 +165,9 @@ def test_device_nms_serving_matches_host_wire_and_shrinks_sync(detector):
 
     host_backend, host = run(False)
     dev_backend, dev = run(True)
-    assert host_backend._batch_bytes / dev_backend._batch_bytes >= 10
+    bucket = host_backend.buckets[0]
+    assert (host_backend._batch_bytes[bucket]
+            / dev_backend._batch_bytes[bucket]) >= 10
     for rid in range(3):
         d = dev[rid].detections
         assert "raw" not in d and d["valid"] == int(np.sum(d["scores"] > 0))
@@ -178,16 +180,16 @@ def test_device_nms_serving_matches_host_wire_and_shrinks_sync(detector):
 
 
 def test_host_sync_bytes_attributed_at_dispatch_tick(detector):
-    """Satellite fix: overlap mode used to charge tick t with the bytes of
-    the batch harvested from tick t−1. The payload of the fixed-width
-    executable is static (jax.eval_shape), so bytes are now credited at
-    the dispatch tick — the per-tick series is identical across overlap
-    on/off (overlap's extra drain tick costs 0) and per-sync bytes are
+    """Satellite fix (PR 8): pipelined mode used to charge tick t with the
+    bytes of the batch harvested from tick t−1. The payload of the
+    fixed-width executable is static (jax.eval_shape), so bytes are now
+    credited at the dispatch tick — the per-tick series is identical across
+    depth 1/2 (depth 2's extra drain tick costs 0) and per-sync bytes are
     directly comparable."""
     _, art, imgs_u8 = detector
 
-    def series(overlap):
-        backend = DetectionBackend(art, slots=2, overlap=overlap)
+    def series(depth):
+        backend = DetectionBackend(art, slots=2, depth=depth)
         backend.warmup()            # pre-count syncs ignored by the scheduler
         sched = Scheduler(backend)
         for i in range(3):
@@ -199,9 +201,9 @@ def test_host_sync_bytes_attributed_at_dispatch_tick(detector):
             per_tick.append(sched.metrics.host_sync_bytes - before)
         return backend, sched.metrics.summary(), per_tick
 
-    ss_backend, ss_sum, ss_series = series(overlap=False)
-    _, ov_sum, ov_series = series(overlap=True)
-    B = ss_backend._batch_bytes
+    ss_backend, ss_sum, ss_series = series(depth=1)
+    _, ov_sum, ov_series = series(depth=2)
+    B = ss_backend._batch_bytes[ss_backend.buckets[0]]
     assert ss_series == [B, B]           # dispatch ticks carry the bytes...
     assert ov_series == [B, B, 0]        # ...and the drain tick carries none
     assert ss_sum["host_sync_bytes_per_sync"] == B

@@ -1,0 +1,422 @@
+"""K-deep dispatch window + bucketed multi-resolution admission (PR 9).
+
+Four layers of coverage, cheapest first:
+
+1. `DispatchWindow` property: for K ∈ {1,2,4,8} over drain + burst arrival
+   traces, the real Scheduler driving a windowed mock backend must emit
+   exactly the (tick, batch-rids) schedule predicted by a pure-python
+   oracle that re-implements the two window rules (depth rule: after a
+   push at most K−1 batches stay resident; drain rule: a no-push tick
+   retires exactly one) — and harvest order must equal dispatch order.
+2. Per-bucket admission: flooding one resolution bucket must not starve a
+   sibling bucket — the starved bucket admits on its arrival tick through
+   the same scheduler (the single-admit_width regression this PR fixes).
+3. Real detection backend: a K-sweep over a single-bucket stream is
+   bit-exact vs the K=1 single-shot run and completes in ascending rid
+   order at every depth; a mixed two-bucket stream serves each image with
+   its own bucket's grid and matches the single-resolution reference
+   bit-exactly.
+4. Compose: detect→LM hand-off on one tick loop conserves every request
+   (lost == 0, no duplicates) and the prompt is exactly the detection
+   template.
+
+Plus the `overlap=` → `depth=` deprecation shim contract.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.serve import DispatchWindow, Scheduler, ServeRequest
+from repro.serve.api import Emission
+
+
+# ---------------------------------------------------------------------------
+# 1. DispatchWindow vs pure-python oracle
+# ---------------------------------------------------------------------------
+
+class WindowedMockBackend:
+    """Jax-free backend exercising DispatchWindow through the real
+    Scheduler: admitted rows stage, step() dispatches the staged batch into
+    the window and harvests due batches, every row emits one final payload
+    at its batch's harvest tick."""
+
+    def __init__(self, slots, depth):
+        self.capacity = depth * slots
+        self.admit_width = slots
+        self.depth = depth
+        self._rows = {}
+        self._staged = []
+        self._window = DispatchWindow(depth)
+        self._due = []
+
+    def admit(self, assignments):
+        for slot, req in assignments:
+            self._rows[slot] = req.rid
+            self._staged.append(slot)
+
+    def step(self):
+        pushed = False
+        if self._staged:
+            self._window.push(list(self._staged))
+            self._staged = []
+            pushed = True
+        self._due = self._window.pop_due(pushed=pushed)
+
+    def harvest(self):
+        out = {}
+        for batch in self._due:
+            for slot in batch:
+                out[slot] = [Emission(kind="detections",
+                                      payload={"rid": self._rows[slot]},
+                                      final=True)]
+        self._due = []
+        return out
+
+    def release(self, slot):
+        self._rows.pop(slot, None)
+
+
+def window_oracle(trace, slots, depth):
+    """Pure-python prediction of the emission schedule.
+
+    ``trace`` maps tick → [rids arriving]. Returns [(tick, (rids...)), ...]
+    in emission order. Re-implements: FIFO admission capped by admit width
+    and free slots, one batch dispatched per tick, and the two window
+    retirement rules. Slots release at the harvest tick."""
+    arrivals = {t: list(rids) for t, rids in trace.items()}
+    capacity = depth * slots
+    pending, window, emissions = [], [], []
+    active = t = 0
+    total = sum(len(v) for v in arrivals.values())
+    done = 0
+    while done < total or pending or window or arrivals:
+        pending.extend(arrivals.pop(t, []))
+        take = min(slots, capacity - active, len(pending))
+        batch, pending = pending[:take], pending[take:]
+        active += take
+        pushed = False
+        if batch:
+            window.append(batch)
+            pushed = True
+        due = []
+        if not pushed and window:
+            due.append(window.pop(0))
+        while len(window) >= depth:
+            due.append(window.pop(0))
+        for b in due:
+            emissions.append((t, tuple(b)))
+            active -= len(b)
+            done += len(b)
+        t += 1
+        assert t < 10_000, "oracle failed to drain"
+    return emissions
+
+
+TRACES = {
+    # one big burst: the window must saturate to depth K then drain
+    "burst": {0: list(range(12))},
+    # drip feed slower than the service rate: drain rule fires every gap
+    "drip": {t: [t] for t in range(0, 16, 3)},
+    # burst, silence (full drain), second burst
+    "drain+burst": {0: [0, 1, 2, 3, 4], 20: [5, 6, 7, 8, 9, 10]},
+    # ragged arrivals that stage partial batches
+    "ragged": {0: [0], 1: [1, 2, 3], 2: [4], 7: [5, 6], 8: [7]},
+}
+
+
+@pytest.mark.parametrize("depth", [1, 2, 4, 8])
+@pytest.mark.parametrize("name", sorted(TRACES))
+def test_window_schedule_matches_oracle(depth, name):
+    trace = TRACES[name]
+    backend = WindowedMockBackend(slots=2, depth=depth)
+    sched = Scheduler(backend)
+    got = []
+    sink_tick = [0]
+    sched._sink = lambda res: got.append((sink_tick[0], res.rid,
+                                          res.detections["rid"]))
+    arrivals = {t: list(rids) for t, rids in trace.items()}
+    horizon = max(arrivals) + 1
+    for t in range(10_000):
+        sink_tick[0] = t
+        for rid in arrivals.pop(t, []):
+            assert sched.submit(ServeRequest(rid=rid))
+        sched.tick()
+        if t >= horizon and not (sched.queue or sched.active):
+            break
+    else:
+        raise AssertionError("scheduler failed to drain")
+
+    # every payload carries its own rid (no cross-slot mixups)
+    assert all(rid == payload for _, rid, payload in got)
+    # group per tick and compare with the oracle's schedule. Within one
+    # tick the scheduler surfaces rows in slot-id order (an implementation
+    # detail); dispatch-order harvesting at batch granularity is asserted
+    # inside DispatchWindow itself, so membership-per-tick is the contract.
+    per_tick = {}
+    for t, rid, _ in got:
+        per_tick.setdefault(t, []).append(rid)
+    want = {}
+    for t, batch in window_oracle(trace, slots=2, depth=depth):
+        want.setdefault(t, []).extend(batch)
+    assert ({t: sorted(v) for t, v in per_tick.items()}
+            == {t: sorted(v) for t, v in want.items()}), (name, depth)
+
+
+def test_window_rules_directly():
+    """depth=1 retires every push immediately; drain ticks retire exactly
+    one; depth<1 is rejected; harvest-order assertion is armed."""
+    with pytest.raises(ValueError):
+        DispatchWindow(0)
+    w = DispatchWindow(1)
+    w.push("a")
+    assert w.pop_due(pushed=True) == ["a"]       # depth rule at K=1
+    w3 = DispatchWindow(3)
+    w3.push("a"), w3.push("b")
+    assert w3.pop_due(pushed=True) == []         # 2 resident < K
+    w3.push("c")
+    assert w3.pop_due(pushed=True) == ["a"]      # at K: oldest retires
+    assert w3.pop_due(pushed=False) == ["b"]     # drain rule: exactly one
+    assert w3.pop_due(pushed=False) == ["c"]
+    assert w3.pop_due(pushed=False) == []        # empty window drains empty
+
+
+# ---------------------------------------------------------------------------
+# 2. Per-bucket admission: a full sibling bucket must not starve the other
+# ---------------------------------------------------------------------------
+
+class BucketMockBackend:
+    """Two-bucket jax-free backend: bucket = image_shape[0]. Rows live one
+    tick. Tracks the admit page composition per tick."""
+
+    def __init__(self, slots, buckets=(64, 96)):
+        self.buckets = tuple(buckets)
+        self.capacity = len(self.buckets) * slots
+        self.admit_width = len(self.buckets) * slots
+        self.bucket_admit_width = slots
+        self._rows = {}
+        self.admit_pages = []
+
+    def bucket_of(self, req):
+        return int(req.image_shape[0])
+
+    def admit(self, assignments):
+        self.admit_pages.append([(req.rid, self.bucket_of(req))
+                                 for _, req in assignments])
+        for slot, req in assignments:
+            self._rows[slot] = req.rid
+
+    def step(self):
+        pass
+
+    def harvest(self):
+        out = {slot: [Emission(kind="detections", payload={"rid": rid},
+                               final=True)]
+               for slot, rid in self._rows.items()}
+        return out
+
+    def release(self, slot):
+        self._rows.pop(slot, None)
+
+
+def test_starved_bucket_admits_past_full_sibling():
+    """Regression (satellite 3): the scheduler's admit loop assumed one
+    global admit width. Flood bucket 64 beyond its per-bucket width, then
+    submit ONE bucket-96 request: it must admit on the same tick, popping
+    PAST the deferred bucket-64 overflow, and the overflow must re-queue
+    un-lost."""
+    backend = BucketMockBackend(slots=2)
+    sched = Scheduler(backend)
+    for rid in range(6):                      # 6 × bucket-64 ≫ width 2
+        assert sched.submit(ServeRequest(rid=rid, image_shape=(64, 64, 3)))
+    assert sched.submit(ServeRequest(rid=100, image_shape=(96, 96, 3)))
+    sched.tick()
+    first = backend.admit_pages[0]
+    # bucket 64 capped at its width, bucket 96 admitted the SAME tick
+    assert [rb for rb in first if rb[1] == 64] == [(0, 64), (1, 64)]
+    assert (100, 96) in first
+    # deferred bucket-64 requests re-queued in order, nothing lost
+    rest = sched.run()
+    all_res = sched.results
+    assert sorted(r.rid for r in all_res) == [0, 1, 2, 3, 4, 5, 100]
+    assert all(r.finish_reason == "ok" for r in all_res)
+    admitted_64 = [rb[0] for page in backend.admit_pages
+                   for rb in page if rb[1] == 64]
+    assert admitted_64 == [0, 1, 2, 3, 4, 5]  # original order preserved
+    del rest
+
+
+def test_queued_in_bucket_signal():
+    """The router's per-bucket depth signal counts only the queried
+    bucket's waiting requests."""
+    backend = BucketMockBackend(slots=1)
+    sched = Scheduler(backend)
+    for rid in range(4):
+        sched.submit(ServeRequest(rid=rid, image_shape=(64, 64, 3)))
+    sched.submit(ServeRequest(rid=9, image_shape=(96, 96, 3)))
+    assert sched.queued_in_bucket(64) == 4
+    assert sched.queued_in_bucket(96) == 1
+    assert sched.queued == 5
+
+
+# ---------------------------------------------------------------------------
+# 3. Real detection backend: K-sweep bit-exactness + multi-resolution
+# ---------------------------------------------------------------------------
+
+N_IMGS = 6
+SLOTS = 2
+
+
+@pytest.fixture(scope="module")
+def two_bucket_detector():
+    import jax
+    import jax.numpy as jnp
+    from repro.models import yolo
+    rng = np.random.default_rng(7)
+    imgs = {b: rng.integers(0, 256, (N_IMGS, b, b, 3), np.uint8)
+            for b in (64, 96)}
+    _, art = yolo.build_detector(
+        jax.random.PRNGKey(0), jnp.asarray(imgs[64][:1], jnp.float32) / 256.0,
+        profile="interpret", buckets=(64, 96))
+    from repro.serve import DetectionBackend
+    template = DetectionBackend(art, slots=SLOTS, depth=2,
+                                profile="interpret")
+    template.warmup()
+    return art, imgs, template
+
+
+def _serve(backend, reqs):
+    return Scheduler(backend).run(reqs)
+
+
+def test_kdeep_sweep_bit_exact_and_ordered(two_bucket_detector):
+    """Single-bucket stream at K ∈ {1,2,4,8}: completion order is dispatch
+    order (ascending rid) at EVERY depth, and payloads are bit-exact vs
+    the K=1 single-shot run — deeper pipelining changes timing only."""
+    _, imgs, template = two_bucket_detector
+    reqs = lambda: [ServeRequest(rid=i, image=imgs[64][i])
+                    for i in range(N_IMGS)]
+    base = {r.rid: r.detections["raw"]
+            for r in _serve(template.spawn(depth=1), reqs())}
+    for depth in (1, 2, 4, 8):
+        res = _serve(template.spawn(depth=depth), reqs())
+        assert [r.rid for r in res] == list(range(N_IMGS)), depth
+        for r in res:
+            assert np.array_equal(r.detections["raw"], base[r.rid]), \
+                (depth, r.rid)
+
+
+def test_mixed_stream_matches_single_resolution_reference(
+        two_bucket_detector):
+    """Two resolution buckets through ONE scheduler: every image comes back
+    on its own bucket's grid, bit-exact vs a single-resolution run of the
+    same images — and completion follows per-bucket batch dispatch order,
+    stable across depths."""
+    _, imgs, template = two_bucket_detector
+    # rid → (bucket, index): evens are 64s, odds are 96s
+    pick = lambda rid: (64, rid // 2) if rid % 2 == 0 else (96, rid // 2)
+    mixed = lambda: [ServeRequest(rid=rid, image=imgs[pick(rid)[0]]
+                                  [pick(rid)[1]]) for rid in range(N_IMGS)]
+    res2 = _serve(template.spawn(depth=2), mixed())
+    assert sorted(r.rid for r in res2) == list(range(N_IMGS))
+    for r in res2:
+        bucket, _ = pick(r.rid)
+        assert r.detections["raw"].shape == (bucket // 32, bucket // 32, 75)
+    # bit-exact vs each bucket's single-resolution depth=1 reference
+    for bucket in (64, 96):
+        rids = [rid for rid in range(N_IMGS) if pick(rid)[0] == bucket]
+        ref = _serve(template.spawn(depth=1),
+                     [ServeRequest(rid=rid, image=imgs[bucket][pick(rid)[1]])
+                      for rid in rids])
+        ref_by_rid = {r.rid: r.detections["raw"] for r in ref}
+        for r in res2:
+            if r.rid in ref_by_rid:
+                assert np.array_equal(r.detections["raw"],
+                                      ref_by_rid[r.rid]), r.rid
+    # dispatch order is stable across K (same batches, same sequence)
+    res4 = _serve(template.spawn(depth=4), mixed())
+    assert [r.rid for r in res4] == [r.rid for r in res2]
+
+
+def test_unknown_resolution_rejected(two_bucket_detector):
+    _, _, template = two_bucket_detector
+    backend = template.spawn()
+    with pytest.raises(ValueError, match="bucket"):
+        backend.bucket_of(ServeRequest(rid=0, image_shape=(128, 128, 3)))
+
+
+# ---------------------------------------------------------------------------
+# 4. Compose: detect→LM on one tick loop, zero lost
+# ---------------------------------------------------------------------------
+
+def test_compose_pipeline_conserves_requests(two_bucket_detector):
+    import jax
+    from repro import configs
+    from repro.models.transformer import init_lm_params
+    from repro.serve import (ComposePipeline, ComposeRequest,
+                             LMBackend, SamplingParams, detections_to_prompt)
+    _, imgs, template = two_bucket_detector
+    cfg = configs.get_reduced("chatglm3-6b")
+    lm = LMBackend(cfg, init_lm_params(jax.random.PRNGKey(1), cfg),
+                   slots=SLOTS, max_len=32, seed=0)
+    pipe = ComposePipeline(template.spawn(depth=2), lm,
+                           vocab=cfg.vocab_size)
+    results = pipe.run([ComposeRequest(rid=i, image=imgs[64][i],
+                                       sampling=SamplingParams(max_new=4))
+                        for i in range(4)])
+    s = pipe.summary()
+    assert s["lost"] == 0 and s["duplicated"] == 0
+    assert s["handoffs"] == len(results) == 4
+    assert all(h.kind == "compose" for h in pipe.handoffs)
+    for r in results:
+        assert r.finish_reason in ("length", "stop")
+        assert len(r.tokens) >= 1
+        assert r.prompt == detections_to_prompt(r.detections,
+                                                vocab=cfg.vocab_size)
+        assert all(1 <= t < cfg.vocab_size for t in r.prompt)
+
+
+def test_detections_to_prompt_template():
+    from repro.serve import detections_to_prompt
+    # compact device-NMS wire
+    compact = {"valid": 2, "classes": np.array([3, 7, 0]),
+               "scores": np.array([0.9, 0.8, 0.0])}
+    p = detections_to_prompt(compact, vocab=64)
+    assert p[0] == 1 and len(p) == 4          # DESCRIBE, COUNT, 2 classes
+    # raw wire: scores > 0 mark live rows
+    raw = {"scores": np.array([0.5, 0.0, 0.25]),
+           "classes": np.array([3, 9, 7])}
+    assert detections_to_prompt(raw, vocab=64) == p  # same classes {3, 7}
+    assert detections_to_prompt(None, vocab=64)[1] \
+        != detections_to_prompt(compact, vocab=64)[1]  # count differs
+    with pytest.raises(ValueError):
+        detections_to_prompt(None, vocab=3)
+
+
+# ---------------------------------------------------------------------------
+# overlap= → depth= deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_overlap_shim_maps_and_warns_once(two_bucket_detector):
+    import repro.serve.backends as backends
+    from repro.serve import DetectionBackend
+    art, _, _ = two_bucket_detector
+    backends._detect_overlap_warned = False       # re-arm warn-once
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        b2 = DetectionBackend(art, slots=1, overlap=True,
+                              profile="interpret")
+        b1 = DetectionBackend(art, slots=1, overlap=False,
+                              profile="interpret")
+    assert b2.depth == 2 and b1.depth == 1
+    deps = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(deps) == 1                         # warn ONCE per process
+    assert "depth" in str(deps[0].message)
+
+
+def test_overlap_and_depth_together_rejected(two_bucket_detector):
+    from repro.serve import DetectionBackend
+    art, _, _ = two_bucket_detector
+    with pytest.raises(TypeError, match="not both"):
+        DetectionBackend(art, slots=1, overlap=True, depth=4,
+                         profile="interpret")

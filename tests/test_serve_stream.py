@@ -1,6 +1,6 @@
 """serve v3 streaming tests: scheduler burst/deadline traces against a pure
 python reference model, device-side done-mask decode equivalence, and
-double-buffered detection serving (overlap) bit-exactness — including the
+K-deep pipelined detection serving (depth=2) bit-exactness — including the
 trained-regime NMS-set check that closes PR 3's σ(0)² tied-score gap.
 
 `LifetimeBackend` / `run_trace` / `reference_trace` / `assert_trace_ok` are
@@ -53,10 +53,12 @@ class LifetimeBackend:
         for slot, rec in self.rows.items():
             rec[2] -= 1
             if rec[1] == "lm":
-                self._ems.setdefault(slot, []).append(Emission(token=7))
+                self._ems.setdefault(slot, []).append(
+                    Emission(kind="token", payload=7))
             elif rec[2] <= 0:
                 self._ems.setdefault(slot, []).append(
-                    Emission(payload={"rid": rec[0]}, final=True))
+                    Emission(kind="detections", payload={"rid": rec[0]},
+                             final=True))
 
     def harvest(self):
         out, self._ems = self._ems, {}
@@ -349,15 +351,15 @@ def served_burst():
     art = yolo.deploy_yolo_kernel(params)
 
     runs = {}
-    for overlap in (False, True):
-        backend = DetectionBackend(art, slots=WIDTH, overlap=overlap,
+    for depth in (1, 2):
+        backend = DetectionBackend(art, slots=WIDTH, depth=depth,
                                    max_out=120)
         backend.warmup()
         sched = Scheduler(backend, max_queue=N_IMGS)
         results = sched.run([ServeRequest(rid=i, image=imgs_u8[i])
                              for i in range(N_IMGS)])      # one 4×B burst
-        runs[overlap] = ({r.rid: r for r in results},
-                         sched.metrics.summary())
+        runs[depth] = ({r.rid: r for r in results},
+                       sched.metrics.summary())
     return params, imgs_u8, runs
 
 
@@ -366,8 +368,8 @@ def test_overlap_serving_bit_exact_vs_single_shot(served_burst):
     single-shot DetectionBackend outputs bit-exactly — same fixed-width
     executable, same batch composition, one tick later."""
     _, _, runs = served_burst
-    single, _ = runs[False]
-    overlap, _ = runs[True]
+    single, _ = runs[1]
+    overlap, _ = runs[2]
     assert sorted(overlap) == sorted(single) == list(range(N_IMGS))
     for rid in range(N_IMGS):
         a, b = single[rid].detections, overlap[rid].detections
@@ -382,13 +384,13 @@ def test_overlap_burst_drains_with_bounded_syncs(served_burst):
     keeps the device batch at the backend's admit width, and costs at most
     one blocking host sync per tick."""
     _, _, runs = served_burst
-    _, summary = runs[True]
+    _, summary = runs[2]
     assert summary["requests_dropped"] == 0
     assert summary["requests_completed"] == N_IMGS
     assert summary["host_syncs_per_tick"] <= 1.0
     assert summary["queue_depth_max"] >= N_IMGS - 2 * WIDTH  # burst > pool
     assert summary["ticks"] == N_IMGS // WIDTH + 1           # +1 drain tick
-    _, ss = runs[False]
+    _, ss = runs[1]
     assert ss["ticks"] == N_IMGS // WIDTH
 
 
@@ -399,7 +401,7 @@ def test_overlap_served_nms_sets_match_float_reference(served_burst):
     from repro.core import verify
     from repro.models import detection, yolo
     params, imgs_u8, runs = served_burst
-    by_rid, _ = runs[True]
+    by_rid, _ = runs[2]
     fimg = jnp.asarray(imgs_u8, jnp.float32) / 256.0
     ref_raw = yolo.yolo_forward_float(params, fimg)
     got_raw = np.stack([by_rid[i].detections["raw"]
@@ -439,14 +441,14 @@ def test_fleet_router_real_backend_bit_exact(served_burst):
     from repro.serve.fleet import FleetMetrics, Router
     params, imgs_u8, runs = served_burst
     art = yolo.deploy_yolo_kernel(params)
-    template = DetectionBackend(art, slots=WIDTH, overlap=True, max_out=120)
+    template = DetectionBackend(art, slots=WIDTH, depth=2, max_out=120)
     template.warmup()                  # one compile covers every spawn()
     router = Router(template.spawn, replicas=2,
                     metrics=FleetMetrics(), keep_results=True)
     results = router.run([ServeRequest(rid=i, image=imgs_u8[i])
                           for i in range(N_IMGS)])
     assert router.metrics.lost == 0 and router.metrics.dropped == 0
-    single, _ = runs[True]
+    single, _ = runs[2]
     by_rid = {r.rid: r for r in results}
     assert sorted(by_rid) == sorted(single) == list(range(N_IMGS))
     for rid in range(N_IMGS):
