@@ -96,6 +96,33 @@ class QTensor:
                    kdim=int(w.shape[axis]))
 
     @classmethod
+    def quantize_b1(cls, x: jax.Array, axis: int = -1,
+                    per_slice: bool = False) -> "QTensor":
+        """Sign-binarize ``x`` to packed words along ``axis`` + α = mean|x|.
+
+        The b1 *activation* wire format (``dist.collectives``): value ≈
+        sign(x)·α — 1 bit per element plus one 4-byte scale, the densest
+        wire the W1A8 dataflow owns, for sign-dominated boundaries where
+        magnitude is already saturated. α is per-tensor by default;
+        ``per_slice=True`` computes one α per slice along ``axis``
+        (kept as a broadcastable keepdims vector). Either way α is
+        clamped to 1e-20 exactly like the s8 wire scale (`quantize_s8`):
+        an all-zero tensor — or, per slice, an all-zero row — would
+        otherwise carry α = 0, which NaN-poisons any consumer that
+        divides by the scale; clamped, the round-trip stays finite with
+        |x̂| ≤ 1e-20.
+        """
+        x = jnp.asarray(x)
+        ax = axis if axis >= 0 else x.ndim + axis
+        if per_slice:
+            alpha = jnp.mean(jnp.abs(x), axis=ax, keepdims=True)
+        else:
+            alpha = jnp.mean(jnp.abs(x))
+        alpha = jnp.maximum(alpha.astype(jnp.float32), 1e-20)
+        return cls(packing.pack_signs(x, axis=ax), alpha, "b1",
+                   axis=ax, kdim=int(x.shape[ax]))
+
+    @classmethod
     def from_f32(cls, x: jax.Array) -> "QTensor":
         return cls(jnp.asarray(x), jnp.ones((), jnp.float32), "f32")
 

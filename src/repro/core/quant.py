@@ -134,6 +134,32 @@ def requant_epilogue(y: jax.Array, out_step: float,
     return jnp.clip(q, 0, ACT_QMAX).astype(out_dtype)
 
 
+def fold_codes_to_uniform_step(a_u8: jax.Array,
+                               mul_prev: jax.Array) -> tuple:
+    """(codes, per-input-channel steps) → (codes', uniform scalar step m̄).
+
+    The XNOR-popcount accumulation contracts bit planes against packed
+    sign words — a per-input-channel Mul_prev cannot ride inside the
+    bit-packed tree (Σ_k s_k·m_k·a_k does not factor out of the popcount).
+    Instead the codes are requantized onto the coarsest channel's grid,
+    m̄ = max_k m_k:
+
+        a'_k = clip(round(a_k · m_k / m̄), 0, 255),   value ≈ a'_k · m̄
+
+    and the single m̄ folds into Div_current exactly like the RTL's
+    scale-into-the-accumulator discipline. No clipping ever engages
+    (m_k/m̄ ≤ 1), and when the steps are already uniform the ratio is
+    exactly 1.0 in IEEE arithmetic, so the fold is a bit-exact identity —
+    preserving the popcount-vs-dot bit-exactness contract. ``mul_prev``
+    broadcasts against the trailing axis of ``a_u8``.
+    """
+    m = mul_prev.astype(jnp.float32)
+    mbar = jnp.maximum(jnp.max(m), 1e-20)
+    codes = jnp.clip(round_half_away(a_u8.astype(jnp.float32) * (m / mbar)),
+                     0, ACT_QMAX).astype(jnp.uint8)
+    return codes, mbar
+
+
 # ---------------------------------------------------------------------------
 # Eq. 3-2 / 3-4: sign-controlled accumulation (reference semantics)
 # ---------------------------------------------------------------------------

@@ -96,39 +96,72 @@ def wire_bytes_saved(tree, n: int) -> dict:
 # Point-to-point int8 wire: the pipeline-stage collective_permute payload.
 # ---------------------------------------------------------------------------
 
-def quantize_wire(x: jax.Array) -> QTensor:
-    """f32 → symmetric-int8 QTensor with a *local* per-tensor scale.
+def quantize_wire(x: jax.Array, qtype: str = "s8") -> QTensor:
+    """f32 → QTensor wire payload with a *local* per-tensor scale.
 
     Unlike the all-reduce legs there is no cross-shard sum here — each
     stage-to-stage hop carries exactly one tensor from one sender — so no
     pmax'd shared scale is needed: the 4-byte scale rides the wire next to
     its codes (the QTensor's two pytree leaves are the wire format).
+
+    ``qtype="s8"`` — symmetric int8, 1 byte/element (`QTensor.quantize_s8`).
+    ``qtype="b1"`` — packed sign bits + α = mean|x|, 1 *bit*/element
+    (`QTensor.quantize_b1`, packed along the trailing axis): the wire for
+    sign-dominated boundaries, where magnitude is saturated and the sign
+    plane carries the information.
     """
-    return QTensor.quantize_s8(x)
+    if qtype == "s8":
+        return QTensor.quantize_s8(x)
+    if qtype == "b1":
+        return QTensor.quantize_b1(x)
+    raise ValueError(f"unknown wire qtype {qtype!r}")
 
 
 def dequantize_wire(qt: QTensor, dtype=jnp.float32) -> jax.Array:
     return qt.dequantize().astype(dtype)
 
 
-def permute_quantized(x: jax.Array, axis: str, perm) -> jax.Array:
-    """``ppermute`` with int8 codes + f32 scale on the wire instead of f32.
+_WIRE_QTYPES = {"int8": "s8", "b1": "b1"}
+
+
+def permute_quantized(x: jax.Array, axis: str, perm,
+                      wire: str = "int8") -> jax.Array:
+    """``ppermute`` with quantized codes + f32 scale on the wire, not f32.
 
     quantize → permute the QTensor (a pytree: both leaves hop together) →
     dequantize on the receiver. Devices outside ``perm`` receive zeros for
     both leaves, so they dequantize to exactly 0 — identical boundary
-    semantics to a plain f32 ppermute. Error envelope: symmetric int8
-    round-half-away ⇒ |x̂ − x| ≤ scale/2 = max|x|/254 per element
-    (~0.4%·max per hop), the bound the dist tests assert.
+    semantics to a plain f32 ppermute (for ``wire="b1"`` the zero words
+    unpack to −1 signs, but the zero scale still yields exact 0).
+
+    Error envelopes: ``wire="int8"`` — symmetric int8 round-half-away ⇒
+    |x̂ − x| ≤ scale/2 = max|x|/254 per element (~0.4%·max per hop), the
+    bound the dist tests assert. ``wire="b1"`` — x̂ = sign(x)·mean|x|:
+    magnitude information is gone entirely, so the per-element error is
+    |x| − α-sized; tight only on sign-dominated tensors (|x| ≈ const),
+    which is the contract `pipeline_train_step(act_wire="b1")` documents.
     """
-    qt = jax.lax.ppermute(quantize_wire(x), axis, perm)
+    qt = jax.lax.ppermute(quantize_wire(x, _WIRE_QTYPES[wire]), axis, perm)
     return dequantize_wire(qt, x.dtype)
 
 
 def permute_wire_bytes(x: jax.Array, n_hops: int) -> dict:
-    """Accounting: per-schedule-tick permute payload, f32 vs int8 wire."""
+    """Accounting: per-schedule-tick permute payload — f32 vs int8 vs b1.
+
+    int8: 1 byte/element + one 4-byte scale per hop. b1: the trailing
+    axis packs 32 signs/uint32 word (padded to a word boundary) + one
+    4-byte α per hop — the code payload is exactly 8× smaller than
+    int8's (1 bit vs 8), the end-to-end hop ratio approaches 8× from
+    below because both wires carry the same 4-byte scale.
+    """
     numel = int(jnp.size(x))
+    last = int(x.shape[-1]) if jnp.ndim(x) else 1
+    words = (numel // max(last, 1)) * ((last + 31) // 32)
     f32 = 4 * numel * n_hops
     int8 = (1 * numel + 4) * n_hops
-    return {"f32_bytes": f32, "int8_bytes": int8,
-            "ratio": f32 / max(int8, 1)}
+    b1 = (4 * words + 4) * n_hops
+    return {"f32_bytes": f32, "int8_bytes": int8, "b1_bytes": b1,
+            "ratio": f32 / max(int8, 1),
+            "ratio_f32_b1": f32 / max(b1, 1),
+            "ratio_int8_b1": int8 / max(b1, 1),
+            "ratio_int8_b1_codes": numel / max(4 * words, 1)}

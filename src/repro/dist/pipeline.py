@@ -97,9 +97,11 @@ def gpipe(stage_fn: Callable, *, mesh, axis: str, num_micro: int,
     ws: pytree of stage-stacked weights, every leaf shaped (n, ...).
     x: (num_micro, mb, ...) microbatched input, replicated.
     ``act_wire="int8"`` ships the stage-hop activations as int8 codes +
-    f32 scale (``dist.collectives.permute_quantized``) instead of f32.
+    f32 scale (``dist.collectives.permute_quantized``) instead of f32;
+    ``act_wire="b1"`` ships packed sign bits + one α scale (1 bit/element
+    — for sign-dominated stage outputs).
     """
-    if act_wire not in ("fp32", "int8"):
+    if act_wire not in ("fp32", "int8", "b1"):
         raise ValueError(f"unknown act_wire {act_wire!r}")
     n = int(mesh.shape[axis])
     ticks = num_micro + n - 1
@@ -118,9 +120,10 @@ def gpipe(stage_fn: Callable, *, mesh, axis: str, num_micro: int,
             if 0 <= m < num_micro:
                 ys = ys.at[m].set(jnp.where(idx == n - 1, out, ys[m]))
             if t < ticks - 1:
-                carry = (permute_quantized(out, axis, shift_right)
-                         if act_wire == "int8" else
-                         jax.lax.ppermute(out, axis, shift_right))
+                carry = (jax.lax.ppermute(out, axis, shift_right)
+                         if act_wire == "fp32" else
+                         permute_quantized(out, axis, shift_right,
+                                           wire=act_wire))
         # only the last stage holds results; psum replicates them
         return jax.lax.psum(ys, axis)
 
@@ -185,18 +188,24 @@ def pipeline_train_local(stage_fn: Callable, loss_fn: Callable, *,
     1F1B — and the math is op-for-op the oracle's VJP.
     """
     n, num_m = num_stages, num_micro
-    if act_wire not in ("fp32", "int8"):
+    if act_wire not in ("fp32", "int8", "b1"):
         raise ValueError(f"unknown act_wire {act_wire!r}")
     sc = _schedule_constants(n, num_m, schedule)
+    # the b1 wire applies to the rightward *activation* wave only: stage
+    # outputs can be sign-dominated (saturated nonlinearities), cotangents
+    # never are — the leftward wave degrades to the int8 wire instead of
+    # losing its magnitudes entirely.
+    fwd_wire = act_wire
+    bwd_wire = "int8" if act_wire == "b1" else act_wire
 
-    def hop(x, perm):
+    def hop(x, perm, wire):
         # the stage-boundary wire: both the rightward activation wave and
-        # the leftward cotangent wave cross it (int8 codes + f32 scale
-        # when act_wire="int8" — 1 byte/elem of ICI, like every other
-        # boundary in the W1A8 dataflow)
-        if act_wire == "int8":
-            return permute_quantized(x, axis, perm)
-        return jax.lax.ppermute(x, axis, perm)
+        # the leftward cotangent wave cross it (quantized codes + f32
+        # scale when the wire is int8/b1 — ≤1 byte/elem of ICI, like
+        # every other boundary in the W1A8 dataflow)
+        if wire == "fp32":
+            return jax.lax.ppermute(x, axis, perm)
+        return permute_quantized(x, axis, perm, wire=wire)
     shift_right = [(i, i + 1) for i in range(n - 1)]
     shift_left = [(i + 1, i) for i in range(n - 1)]
 
@@ -250,7 +259,7 @@ def pipeline_train_local(stage_fn: Callable, loss_fn: Callable, *,
                 dxs = jax.lax.dynamic_update_index_in_dim(
                     dxs, jnp.where(valid & first, dx_m, prev), m_c, 0)
                 if t < sc["bwd_hi"]:
-                    ct_in = hop(dx_m, shift_left)
+                    ct_in = hop(dx_m, shift_left, bwd_wire)
             if t <= sc["fwd_hi"]:
                 m_f = t - idx
                 valid = (m_f >= 0) & (m_f < num_m)
@@ -262,7 +271,7 @@ def pipeline_train_local(stage_fn: Callable, loss_fn: Callable, *,
                 stash = jax.lax.dynamic_update_index_in_dim(
                     stash, jnp.where(valid, x_in, prev), slot, 0)
                 if t < sc["fwd_hi"]:
-                    carry = hop(out, shift_right)
+                    carry = hop(out, shift_right, fwd_wire)
 
         inv = 1.0 / num_m                           # grads of the MEAN loss
         gw = tmap(lambda g, p: (g * inv).astype(p.dtype), gw, w)
@@ -315,7 +324,14 @@ def pipeline_train_step(stage_fn: Callable, loss_fn: Callable, *, mesh,
     ``act_wire == 'int8'`` additionally carries the stage-boundary
     ``collective_permute`` payloads — forward activations *and* backward
     cotangents — as int8 codes + f32 scale (4× less ICI per hop; adds the
-    per-hop quantization noise the dist tests bound).
+    per-hop quantization noise the dist tests bound). ``act_wire == 'b1'``
+    carries the *forward* activations as packed sign bits + one α scale
+    (1 bit/element, ~8× less than int8 on the code payload) while the
+    backward cotangents stay on the int8 wire — sign-dominated stage
+    outputs keep their information, cotangents keep their magnitudes. The
+    loss/grad envelope vs the fp32 wire is documented in EXPERIMENTS.md
+    and asserted by tests/test_pipeline_unit.py; it is tight only when
+    stage outputs saturate (|out| ≈ const), the b1 contract.
 
     Returns ``(loss, grads)``; with ``top`` given, ``(loss, grads,
     grads_top, dx)`` where ``dx`` is the cotangent of ``x`` (so callers can

@@ -59,7 +59,10 @@ class KernelConfig:
     for the fused kernel — produced per grid step); the ops layer clips
     it to a divisor of the row count. ``fused`` routes
     ``w1a8_conv3x3_pool`` through the single fused kernel (True) or
-    conv-then-reduce_window (False, the only pool route for popcount).
+    conv-then-reduce_window (False); both routes admit both accum modes
+    (the fused kernel has dot and popcount datapaths). All field
+    validation happens here at construction — dispatch never rejects a
+    config that constructed cleanly.
     """
 
     op: str = "matmul"
@@ -221,9 +224,11 @@ def resolve_tuned(op: str, dims: Sequence[int], *,
                   table: Optional[dict] = None) -> KernelConfig:
     """Pick the fastest accum variant for the cell, then resolve its config.
 
-    Compares exact-key ``t_us`` across accum modes (popcount only when the
-    caller's operands honour the uniform-step contract); without exact
-    entries for both modes it resolves the dot config normally.
+    Compares exact-key ``t_us`` across accum modes (``allow_popcount=False``
+    restricts to dot for callers that want to opt out); without exact
+    entries for both modes it resolves the dot config normally. Popcount is
+    always *eligible*: per-channel operands are honoured via the
+    uniform-step fold (`core.quant.fold_codes_to_uniform_step`).
     """
     dev = device if device is not None else device_key()
     entries = table if table is not None else load_table()

@@ -3,12 +3,16 @@ pipeline stage (§5.2, Table 1 layers conv1–4, conv7) as one Pallas kernel.
 
 Grid over (batch, pooled output row blocks): each step stages
 ``2·rows + 2`` input row-stripes (the line buffers for ``2·rows`` conv
-rows, halo included), computes all conv rows with one MXU dot over a
-(2·rows·W, K9p) im2col block, applies the Mul_prev/Div/bias/round/clip
-epilogue, and max-reduces 2×2 windows — ``rows`` pooled uint8 rows go to
-HBM per step. Activation traffic for a pool layer drops from
-(write HW + read HW + write HW/4) to (write HW/4): the conv output never
-exists in HBM, exactly like the RTL stage chain.
+rows, halo included), computes all conv rows with one contraction over a
+(2·rows·W, K9p) im2col block — an MXU dot for ``accum="dot"``, bit-plane
+AND+popcount (`_xnor_accumulate`) for ``accum="popcount"`` — applies the
+Mul_prev/Div/bias/round/clip epilogue, and max-reduces 2×2 windows —
+``rows`` pooled uint8 rows go to HBM per step. Activation traffic for a
+pool layer drops from (write HW + read HW + write HW/4) to (write HW/4):
+the conv output never exists in HBM, exactly like the RTL stage chain.
+The popcount route never leaves the bit domain between line buffer and
+pooled codes — conv, quantization post-processing and max pooling run as
+one dataflow, which is the paper's whole §5.2 stage chain in one kernel.
 """
 from __future__ import annotations
 
@@ -22,8 +26,17 @@ from jax.experimental.pallas import tpu as pltpu
 from repro import compat  # noqa: F401  (pltpu.CompilerParams on older jax)
 from repro.core.packing import PACK
 from repro.core.quant import requant_epilogue
-from repro.kernels.w1a8_matmul.kernel import _unpack_tile
+from repro.kernels.w1a8_matmul.kernel import _unpack_tile, _xnor_accumulate
 from repro.kernels.w1a8_conv.kernel import _im2col_rows
+
+
+def _pool_epilogue(y, out_step, nconv: int, w_out: int, cout: int, o_ref):
+    # f32 carrier for the 2×2 max; values are exact uint8 codes
+    y = requant_epilogue(y, out_step, jnp.float32)
+    y = y.reshape(nconv, w_out, cout)
+    both = jnp.maximum(y[0::2], y[1::2])                # vertical 2-max
+    pooled = jnp.maximum(both[:, 0::2, :], both[:, 1::2, :])  # horizontal
+    o_ref[0] = pooled.astype(o_ref.dtype)
 
 
 def _kernel(*refs, rows: int, w_out: int, k9p: int, cout: int,
@@ -37,23 +50,41 @@ def _kernel(*refs, rows: int, w_out: int, k9p: int, cout: int,
     y = jnp.dot(am, signs, preferred_element_type=jnp.float32)
     y = (y * d_ref[...].astype(jnp.float32)
          + b_ref[...].astype(jnp.float32))
-    # f32 carrier for the 2×2 max; values are exact uint8 codes
-    y = requant_epilogue(y, out_step, jnp.float32)
-    y = y.reshape(nconv, w_out, cout)
-    both = jnp.maximum(y[0::2], y[1::2])                # vertical 2-max
-    pooled = jnp.maximum(both[:, 0::2, :], both[:, 1::2, :])  # horizontal
-    o_ref[0] = pooled.astype(o_ref.dtype)
+    _pool_epilogue(y, out_step, nconv, w_out, cout, o_ref)
+
+
+def _popcount_kernel(*refs, rows: int, w_out: int, k9p: int, cout: int,
+                     out_step: float):
+    """Binary-domain fused conv+pool: the im2col codes stay uint32 bit
+    planes, contracted against the stored weight words with AND+popcount
+    (the FPGA PE's XNOR tree); requant + 2×2 max fold into the same step.
+    Uniform-Mul_prev contract: ops.py folds the scalar step into Div.
+    """
+    nconv = 2 * rows
+    line_rows = [r[0, 0] for r in refs[:nconv + 2]]
+    wp_ref, d_ref, b_ref, o_ref = refs[nconv + 2:]
+    cols = _im2col_rows(line_rows, nconv, w_out, k9p, jnp.uint32)
+    s = _xnor_accumulate(cols, wp_ref[...], k9p).astype(jnp.float32)
+    y = s * d_ref[...].astype(jnp.float32) + b_ref[...].astype(jnp.float32)
+    _pool_epilogue(y, out_step, nconv, w_out, cout, o_ref)
 
 
 def w1a8_conv3x3_pool2(a_u8: jax.Array, w_packed: jax.Array,
                        mul_prev: jax.Array, div_post: jax.Array,
                        bias: jax.Array, *, cin: int, out_step: float,
-                       rows: int = 1, compute_dtype=jnp.bfloat16,
+                       accum: str = "dot", rows: int = 1,
+                       compute_dtype=jnp.bfloat16,
                        interpret: bool = True) -> jax.Array:
     """a_u8 (B,H,W,Cin) uint8 (H,W even) → (B,H/2,W/2,Cout) uint8 codes.
 
     ``rows`` pooled rows per grid step ((H/2) % rows == 0); bit-exact
-    across rows choices — per-conv-row dot operands are unchanged.
+    across rows choices — per-conv-row contraction operands are unchanged.
+
+    accum="popcount" contracts in the binary domain (uniform-Mul_prev
+    contract — caller folds the scalar step into div_post; mul_prev is
+    used only for its K9p layout). The integer accumulation is exact and
+    shares the dot path's f32 epilogue expression, so under canonical
+    ``(mul=1, div·m)`` operands the two accum modes are bit-exact.
     """
     from repro.kernels.w1a8_conv.ops import conv_mul9
     b, h, w, _ = a_u8.shape
@@ -65,29 +96,40 @@ def w1a8_conv3x3_pool2(a_u8: jax.Array, w_packed: jax.Array,
         wp = jnp.pad(wp, ((0, k9p // PACK - wp.shape[0]), (0, 0)))
     cout = wp.shape[1]
     wp_ = w + 2
+    assert accum in ("dot", "popcount"), accum
     assert (h // 2) % rows == 0, (h, rows)
-    kernel = functools.partial(_kernel, rows=rows, w_out=w, k9p=k9p,
-                               cout=cout, out_step=out_step,
-                               compute_dtype=compute_dtype)
     def row(dy):
         return pl.BlockSpec(
             (1, 1, wp_, cin),
             lambda bb, i, dy=dy: (bb, 2 * rows * i + dy, 0, 0))
     nconv = 2 * rows
+    row_specs = [row(dy) for dy in range(nconv + 2)]
+    row_ops = (a_pad,) * (nconv + 2)
+    wspec = pl.BlockSpec((k9p // PACK, cout), lambda bb, i: (0, 0))
+    cspec = pl.BlockSpec((1, cout), lambda bb, i: (0, 0))
+    dv = div_post.astype(jnp.float32).reshape(1, cout)
+    bs = bias.astype(jnp.float32).reshape(1, cout)
+    if accum == "popcount":
+        kernel = functools.partial(_popcount_kernel, rows=rows, w_out=w,
+                                   k9p=k9p, cout=cout, out_step=out_step)
+        in_specs = row_specs + [wspec, cspec, cspec]
+        operands = row_ops + (wp, dv, bs)
+    else:
+        kernel = functools.partial(_kernel, rows=rows, w_out=w, k9p=k9p,
+                                   cout=cout, out_step=out_step,
+                                   compute_dtype=compute_dtype)
+        in_specs = row_specs + [wspec,
+                                pl.BlockSpec((1, k9p), lambda bb, i: (0, 0)),
+                                cspec, cspec]
+        operands = row_ops + (wp, mul9, dv, bs)
     return pl.pallas_call(
         kernel,
         grid=(b, (h // 2) // rows),
-        in_specs=[row(dy) for dy in range(nconv + 2)] + [
-            pl.BlockSpec((k9p // PACK, cout), lambda bb, i: (0, 0)),
-            pl.BlockSpec((1, k9p), lambda bb, i: (0, 0)),
-            pl.BlockSpec((1, cout), lambda bb, i: (0, 0)),
-            pl.BlockSpec((1, cout), lambda bb, i: (0, 0))],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, rows, w // 2, cout),
                                lambda bb, i: (bb, i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h // 2, w // 2, cout), jnp.uint8),
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(*((a_pad,) * (nconv + 2)), wp, mul9,
-      div_post.astype(jnp.float32).reshape(1, cout),
-      bias.astype(jnp.float32).reshape(1, cout))
+    )(*operands)

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.packing import PACK, pack_signs
+from repro.core.quant import fold_codes_to_uniform_step
 from repro.kernels import config as _cfg
 from repro.kernels.config import KernelConfig, _UNSET
 from repro.kernels.w1a8_conv import kernel as _k
@@ -54,12 +55,15 @@ def w1a8_conv3x3(a_u8: jax.Array, w_packed: jax.Array, mul_prev: jax.Array,
 
     config.accum="popcount" contracts in the binary domain (XNOR-popcount
     instead of unpack-then-dot). That path cannot apply a per-input-channel
-    Mul_prev inside the accumulation, so it requires a *uniform* mul_prev
-    (per-tensor step) whose scalar is folded into Div_current here:
-    ``S·(div·m) + bias`` — the exact same f32 epilogue expression as the
-    dot path with canonical ``(mul=1, div·m)`` operands, hence bit-exact.
-    Non-uniform mul_prev silently uses only ``mul_prev[0]``; callers with
-    concrete scales (``models/yolo.py``) assert uniformity host-side.
+    Mul_prev inside the bit-packed accumulation; a per-channel mul_prev is
+    honoured by requantizing the codes onto the max step m̄ first
+    (`core.quant.fold_codes_to_uniform_step`) and folding m̄ into
+    Div_current: ``S·(div·m̄) + bias`` — the exact same f32 epilogue
+    expression as the dot path with canonical ``(mul=1, div·m)`` operands.
+    Under a uniform mul_prev the fold is a bit-exact identity, so the
+    popcount-vs-dot bit-exactness contract holds; under per-channel steps
+    it is an ≤½-LSB-per-channel approximation (the producer-side fold in
+    ``models/yolo.py`` avoids even that by emitting uniform-step codes).
     """
     cfg = _cfg.normalize("conv3x3", config, out_step=out_step, accum=accum,
                          interpret=interpret, use_kernel=use_kernel)
@@ -76,7 +80,6 @@ def _w1a8_conv3x3(a_u8, w_packed, mul_prev, div_post, bias, *, cin: int,
         return _ref.w1a8_conv3x3_ref(
             a_u8, w_packed, cin, mul_prev, div_post, bias,
             None if out_step is None else jnp.float32(out_step))
-    a_pad = jnp.pad(a_u8, ((0, 0), (1, 1), (1, 1), (0, 0)))
     mul9 = conv_mul9(mul_prev)
     k9p = mul9.shape[1]
     wp = w_packed
@@ -85,7 +88,9 @@ def _w1a8_conv3x3(a_u8, w_packed, mul_prev, div_post, bias, *, cin: int,
     cout = wp.shape[1]
     dv = div_post.astype(jnp.float32).reshape(1, cout)
     if config.accum == "popcount":
-        dv = dv * mul_prev.astype(jnp.float32).reshape(-1)[0]
+        a_u8, mbar = fold_codes_to_uniform_step(a_u8, mul_prev)
+        dv = dv * mbar
+    a_pad = jnp.pad(a_u8, ((0, 0), (1, 1), (1, 1), (0, 0)))
     return _k.w1a8_conv3x3_pallas(
         a_pad, wp, mul9, dv,
         bias.astype(jnp.float32).reshape(1, cout),
@@ -105,21 +110,16 @@ def w1a8_conv3x3_pool(a_u8: jax.Array, w_packed: jax.Array,
     Same contract as `w1a8_conv3x3` with a quantizing epilogue, but H and W
     must be even and the output is the pooled (B, H/2, W/2, Cout) uint8
     code plane. config.fused=True (default) runs the single fused kernel
-    (`fused_pool.w1a8_conv3x3_pool2` — dot-only); config.fused=False runs
-    the conv kernel then `reduce_window`, which is the route that admits
-    config.accum="popcount" through a pool layer. Both routes are bit-exact
-    (max commutes with the uint8 cast).
+    (`fused_pool.w1a8_conv3x3_pool2`); config.fused=False runs the conv
+    kernel then `reduce_window`. Both routes admit both accum modes and
+    are bit-exact against each other (max commutes with the uint8 cast;
+    the popcount contraction is integer-exact).
     """
     cfg = _cfg.normalize("conv3x3_pool", config, out_step=out_step,
                          interpret=interpret, use_kernel=use_kernel)
     cfg = cfg.replace(interpret=cfg.resolved_interpret())
     if cfg.out_step is None:
         cfg = cfg.replace(out_step=1.0)
-    if cfg.fused and cfg.accum == "popcount" and cfg.use_kernel:
-        raise ValueError(
-            "fuse_pool is a dot-path kernel: the fused conv+pool kernel has "
-            "no popcount datapath — use KernelConfig(fused=False) to route "
-            "popcount through conv-then-pool")
     return _w1a8_conv3x3_pool(a_u8, w_packed, mul_prev, div_post, bias,
                               cin=cin, config=cfg)
 
@@ -139,7 +139,11 @@ def _w1a8_conv3x3_pool(a_u8, w_packed, mul_prev, div_post, bias, *,
         return jax.lax.reduce_window(out, jnp.uint8(0), jax.lax.max,
                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
     from repro.kernels.w1a8_conv.fused_pool import w1a8_conv3x3_pool2
-    return w1a8_conv3x3_pool2(a_u8, w_packed, mul_prev, div_post, bias,
-                              cin=cin, out_step=out_step,
+    dv = div_post
+    if config.accum == "popcount":
+        a_u8, mbar = fold_codes_to_uniform_step(a_u8, mul_prev)
+        dv = div_post.astype(jnp.float32) * mbar
+    return w1a8_conv3x3_pool2(a_u8, w_packed, mul_prev, dv, bias,
+                              cin=cin, out_step=out_step, accum=config.accum,
                               rows=config.conv_rows(a_u8.shape[1] // 2),
                               interpret=config.interpret)

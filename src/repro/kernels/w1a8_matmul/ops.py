@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.packing import PACK, pack_signs
+from repro.core.quant import fold_codes_to_uniform_step
 from repro.kernels import config as _cfg
 from repro.kernels.config import KernelConfig, _UNSET, _round_up
 from repro.kernels.w1a8_matmul import kernel as _k
@@ -32,10 +33,12 @@ def w1a8_matmul(a_u8: jax.Array, w_packed: jax.Array, mul_prev: jax.Array,
 
     Launch configuration comes from ``config=`` (a `KernelConfig`, op
     "matmul"); the old per-call kwargs survive one release behind a
-    DeprecationWarning. config.accum="popcount": XNOR-popcount contraction
-    (uniform-Mul_prev contract; the scalar ``mul_prev[0]`` is folded into
-    div_post so the epilogue — and the rounding — matches the dot path bit
-    for bit).
+    DeprecationWarning. config.accum="popcount": XNOR-popcount contraction.
+    A per-channel mul_prev is honoured by requantizing the codes onto the
+    max step m̄ (`core.quant.fold_codes_to_uniform_step`), which then folds
+    into div_post; under a uniform mul_prev the fold is a bit-exact
+    identity, so the epilogue — and the rounding — matches the dot path
+    bit for bit.
     """
     cfg = _cfg.normalize("matmul", config, out_step=out_step, accum=accum,
                          interpret=interpret, use_kernel=use_kernel)
@@ -72,9 +75,11 @@ def _w1a8_matmul(a_u8, w_packed, mul_prev, div_post, bias, *, k: int,
     bs = jnp.pad(bias.astype(jnp.float32), (0, np_ - n)).reshape(1, np_)
 
     if config.accum == "popcount":
-        # zero-padded K lanes contribute 0 to popcount on their own —
-        # no mul operand needed, its scalar folds into Div_current.
-        dv = dv * mul_prev.astype(jnp.float32).reshape(-1)[0]
+        # zero-padded K lanes carry zero codes (ratio 0 · zero pad) and
+        # contribute 0 to popcount on their own — no mul operand needed,
+        # the uniformized m̄ folds into Div_current.
+        a2, mbar = fold_codes_to_uniform_step(a2, mul.reshape(-1))
+        dv = dv * mbar
         y = _k.w1a8_matmul_popcount_pallas(a2, wp, dv, bs, out_step=out_step,
                                            bm=bm, bk=bk, bn=bn,
                                            interpret=config.interpret)

@@ -86,9 +86,10 @@ def candidates(op: str, dims, accum: str) -> list:
         base = KernelConfig(op=op, accum=accum, out_step=1.0)
         rows_opts = _divisors_leq(h, 16)
         if op == "conv3x3_pool":
-            fused_opts = (True, False) if accum == "dot" else (False,)
-            out.append(base.replace(fused=accum == "dot"))
-            for fused in fused_opts:
+            # both accum modes sweep both pool routes: the fused kernel has
+            # dot AND popcount datapaths (kernels/w1a8_conv/fused_pool.py)
+            out.append(base)        # dataclass default: fused=True
+            for fused in (True, False):
                 for r in rows_opts:
                     out.append(base.replace(fused=fused, rows=r))
         else:

@@ -193,9 +193,12 @@ def calibrate_yolo(params: dict, images: jax.Array, *,
     equivalent of LSQ's learned steps for an untrained/just-initialized net.
 
     ``per_channel=False`` calibrates one step per tensor (the scalar max,
-    broadcast over channels) — the uniform-Mul_prev regime the XNOR-popcount
-    accumulation path requires (and what the FPGA PE actually implements:
-    one fixed-point Mul_prev constant per layer ROM).
+    broadcast over channels) — the uniform-Mul_prev regime the FPGA PE
+    actually implements (one fixed-point Mul_prev constant per layer ROM).
+    Per-channel artifacts serve through every accum mode: the XNOR-popcount
+    path folds the per-channel step ratio into the producer's epilogue
+    (`yolo_forward_kernel`), so ``per_channel=True`` no longer restricts
+    kernel selection.
     """
     params = jax.tree_util.tree_map(lambda x: x, params)  # shallow copy
     x = images
@@ -395,12 +398,13 @@ def build_detector(key: jax.Array, calib_images: jax.Array, *,
     calib_images (B, S, S, 3) float in [0, 1]. Returns
     (calibrated float params, deploy_yolo_kernel artifact) — the float
     params stay the verification oracle for the packed path
-    (core.verify, DESIGN.md §10). ``per_channel=False`` calibrates
-    per-tensor steps (required for the XNOR-popcount accumulation path).
-    ``profile`` names the tuning profile the artifact is destined for:
-    ``"tuned"`` defaults ``per_channel=False`` so the autotuned popcount
-    configs are eligible at serve time; other profiles keep the
-    per-channel default.
+    (core.verify, DESIGN.md §10). ``per_channel`` defaults to True for
+    every profile: per-channel calibration serves through all accum modes,
+    including XNOR-popcount (the forward path folds the step ratio into
+    the producer's epilogue — DESIGN.md §16), so calibration quality is
+    never silently traded for kernel eligibility. ``profile`` names the
+    tuning profile the artifact is destined for (recorded for callers; it
+    no longer changes calibration).
 
     ``buckets`` declares the resolution buckets (image sides, each a
     multiple of 32) this artifact will serve, e.g. ``(256, 320, 416)``.
@@ -412,7 +416,7 @@ def build_detector(key: jax.Array, calib_images: jax.Array, *,
     if profile is not None and profile not in PROFILES:
         raise ValueError(f"profile must be one of {PROFILES}, got {profile!r}")
     if per_channel is None:
-        per_channel = profile != "tuned"
+        per_channel = True
     if buckets is None:
         buckets = (int(calib_images.shape[1]),)
     buckets = tuple(dict.fromkeys(int(b) for b in buckets))
@@ -426,8 +430,11 @@ def build_detector(key: jax.Array, calib_images: jax.Array, *,
 
 
 def art_uniform_steps(art: dict) -> bool:
-    """True iff every W1A8 layer's input steps are per-tensor uniform
-    (the XNOR-popcount eligibility condition)."""
+    """True iff every W1A8 layer's input steps are per-tensor uniform.
+
+    Diagnostic only since the per-channel popcount fold landed: popcount
+    is always eligible — uniform artifacts take the bit-exact identity
+    fold, per-channel artifacts the producer-side uniformization."""
     for entry in art["layers"][1:-1]:
         steps = np.asarray(entry["step_in"])
         if not np.all(steps == steps.reshape(-1)[0]):
@@ -462,13 +469,13 @@ def yolo_layer_cells(batch: int = 1) -> list:
 
 
 def _layer_config(spec: ConvSpec, h: int, batch: int, *, profile: str,
-                  accum, fuse_pool, interpret, uniform: bool,
-                  table) -> KernelConfig:
+                  accum, fuse_pool, interpret, table) -> KernelConfig:
     """Resolve one W1A8 layer's KernelConfig under the named profile.
 
     Explicit ``accum`` / ``fuse_pool`` / ``interpret`` kwargs override the
-    profile's choice; "tuned" reads the autotune table (fastest accum
-    among eligible modes, fused-vs-unfused pool from the winning entry),
+    profile's choice; "tuned" reads the autotune table (fastest accum —
+    popcount is always eligible now that the per-channel fold exists —
+    and fused-vs-unfused pool routing from the winning entry),
     "default"/"interpret" reproduce the historical heuristics.
     """
     if spec.ksize == 1:
@@ -481,12 +488,9 @@ def _layer_config(spec: ConvSpec, h: int, batch: int, *, profile: str,
         if accum is not None:
             cfg = _cfg.resolve(op, dims, accum=accum, table=table)
         else:
-            cfg = _cfg.resolve_tuned(op, dims, allow_popcount=uniform,
-                                     table=table)
+            cfg = _cfg.resolve_tuned(op, dims, table=table)
     else:
         cfg = KernelConfig(op=op, accum=accum or "dot", source=profile)
-    if cfg.accum == "popcount" and op == "conv3x3_pool":
-        cfg = cfg.replace(fused=False)     # fused kernel is dot-only
     if fuse_pool is not None:
         cfg = cfg.replace(fused=fuse_pool)
     elif profile != "tuned":
@@ -526,49 +530,54 @@ def yolo_forward_kernel(art: dict, images: jax.Array, *,
 
     ``fuse_pool`` routes pooled W1A8 layers (conv2–4, conv7) through the
     fused conv+requant+MaxPool kernel (§5.2 Post+MaxPool stage chain) —
-    bit-exact vs the unfused path. ``accum="popcount"`` contracts every
-    W1A8 layer in the binary domain (XNOR-popcount); it requires a
-    per-tensor-calibrated artifact (``build_detector(per_channel=False)``)
-    and is checked host-side here. All three kwargs override the profile.
+    bit-exact vs the unfused path, in both accum modes. ``accum="popcount"``
+    contracts every W1A8 layer in the binary domain (XNOR-popcount); a
+    per-channel-calibrated artifact serves through it via the producer-side
+    step fold — when a layer's consumer contracts with popcount, the
+    producer's epilogue requantizes onto the uniformized step
+    s̄ = max_c s_c (div_eff = α/s̄, b_eff = b/s̄: one rounding, no extra
+    clipping since s̄ ≥ s_c), so the codes reaching the bit-packed
+    accumulation already sit on a per-tensor grid (DESIGN.md §16). All
+    three kwargs override the profile.
     """
     if profile is None:
         profile = "interpret"
     if profile not in PROFILES:
         raise ValueError(f"profile must be one of {PROFILES}, got {profile!r}")
     layers = art["layers"]
-    uniform = art_uniform_steps(art)
-    if accum == "popcount":
-        if fuse_pool:
-            raise ValueError("fuse_pool is a dot-path kernel; "
-                             "accum='popcount' requires fuse_pool=False")
-        for entry in layers[1:-1]:
-            steps = np.asarray(entry["step_in"])
-            if not np.all(steps == steps.reshape(-1)[0]):
-                raise ValueError(
-                    f"accum='popcount' needs uniform act steps; "
-                    f"{entry['spec'].name} is per-channel calibrated — "
-                    f"use build_detector(per_channel=False)")
     table = _cfg.load_table() if profile == "tuned" else None
     sizes = spatial_sizes(images.shape[1])          # static under jit
     batch = images.shape[0]
+    w1a8 = layers[1:-1]
+    cfgs = [_layer_config(e["spec"], sizes[e["spec"].name], batch,
+                          profile=profile, accum=accum, fuse_pool=fuse_pool,
+                          interpret=interpret, table=table)
+            for e in w1a8]
+
+    def boundary_step(step_out, i):
+        # the step the producer's epilogue quantizes ONTO; popcount
+        # consumers get the uniformized s̄ = max_c s_c (producer-side fold)
+        if i < len(cfgs) and cfgs[i].accum == "popcount":
+            return jnp.broadcast_to(jnp.max(step_out), jnp.shape(step_out))
+        return step_out
+
     # conv1 (std, fixed-point-rounded weights) in f32, then quantize to codes.
     w1 = fxp.CONV1_W.roundtrip(layers[0]["w"])
     b1 = fxp.CONV1_B.roundtrip(layers[0]["b"])
     x = jax.nn.relu(_conv2d(images, w1) + b1)
     x = _maxpool2(x)
-    qx = QTensor.quantize_u8(x, layers[0]["step_out"], axis=-1)
+    qx = QTensor.quantize_u8(x, boundary_step(layers[0]["step_out"], 0),
+                             axis=-1)
 
-    for entry in layers[1:-1]:
+    for i, entry in enumerate(w1a8):
         spec: ConvSpec = entry["spec"]
-        cfg = _layer_config(spec, sizes[spec.name], batch, profile=profile,
-                            accum=accum, fuse_pool=fuse_pool,
-                            interpret=interpret, uniform=uniform, table=table)
+        cfg = cfgs[i]
         # Mul_prev = this layer's input steps (= qx.scale: the QTensor
         # carries exactly the dequant context the next kernel fuses);
         # per-channel requant is folded into the epilogue:
         # q = round(acc·(α/s_next) + b/s_next), out_step=1.
         mul_prev = qx.scale
-        s_next = entry["step_out"]                     # (cout,) vector
+        s_next = boundary_step(entry["step_out"], i + 1)   # (cout,) vector
         div_eff = entry["alpha"] / s_next
         b_eff = entry["b"] / s_next
         if spec.ksize == 3 and spec.pool:

@@ -225,14 +225,28 @@ def test_pool_candidates_bit_exact():
             assert np.array_equal(out, ref), (accum, cfg)
 
 
-def test_pool_fused_popcount_raises():
-    cfg = KernelConfig(op="conv3x3_pool", accum="popcount", fused=True)
-    a = jnp.zeros((1, 4, 4, 8), jnp.uint8)
-    wp = conv_ops.conv_pack_weights(jnp.ones((3, 3, 8, 16), jnp.float32))
-    v = jnp.ones((16,), jnp.float32)
-    with pytest.raises(ValueError, match="dot-path"):
-        conv_ops.w1a8_conv3x3_pool(a, wp, jnp.ones((8,)), v, v,
-                                   cin=8, config=cfg)
+def test_pool_fused_popcount_accepted():
+    """fused=True + accum="popcount" is a valid cell: the fused conv+pool
+    kernel has a popcount datapath, so the config constructs cleanly,
+    dispatches without rejection, and matches the unfused
+    popcount-conv→reduce_window route bit-for-bit. (This used to raise a
+    dot-path-only ValueError at dispatch — the config/dispatch split the
+    KernelConfig redesign was meant to remove.)"""
+    rng = np.random.default_rng(11)
+    a = jnp.asarray(rng.integers(0, 256, (1, 4, 4, 8), np.uint8))
+    wp = conv_ops.conv_pack_weights(
+        jnp.asarray(rng.standard_normal((3, 3, 8, 16)), jnp.float32))
+    mul = jnp.full((8,), 0.05, jnp.float32)
+    div = jnp.asarray(rng.uniform(0.5, 2.0, (16,)), jnp.float32)
+    bias = jnp.asarray(rng.standard_normal((16,)), jnp.float32)
+    base = KernelConfig(op="conv3x3_pool", accum="popcount", out_step=1.0,
+                        interpret=True)
+    got = conv_ops.w1a8_conv3x3_pool(a, wp, mul, div, bias, cin=8,
+                                     config=base.replace(fused=True))
+    want = conv_ops.w1a8_conv3x3_pool(a, wp, mul, div, bias, cin=8,
+                                      config=base.replace(fused=False))
+    assert got.dtype == jnp.uint8
+    assert np.array_equal(np.asarray(got), np.asarray(want))
 
 
 # ---------------------------------------------------------------------------

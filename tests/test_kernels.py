@@ -263,6 +263,47 @@ def test_packing_roundtrip_axes():
         assert np.array_equal(np.asarray(un), expect)
 
 
+POOL_SHAPES = [(1, 4, 4, 8, 16), (2, 8, 8, 16, 32), (1, 10, 10, 64, 75),
+               (3, 6, 10, 24, 40)]
+
+
+@pytest.mark.parametrize("b,h,w,cin,cout", POOL_SHAPES)
+def test_fused_pool_popcount_bit_exact(b, h, w, cin, cout):
+    """Fused conv+pool popcount datapath, on every even-plane kernel test
+    shape (incl. ragged Cout=75 and the K9p-padded Cin=24): bit-exact vs
+    (a) the fused DOT datapath under canonical operands (mul ≡ m0 folded
+    into div keeps the dot prologue's bf16 operands exact integers — both
+    paths compute the same Σ s·a and run the same requant+2×2-max
+    epilogue) and (b) the unfused popcount-conv→reduce_window route under
+    the original operands."""
+    from repro.kernels.config import KernelConfig
+    kw, ka, km = jax.random.split(jax.random.PRNGKey(b * 13 + cin), 3)
+    wgt = jax.random.normal(kw, (3, 3, cin, cout))
+    wp = conv_ops.conv_pack_weights(wgt)
+    a = jax.random.randint(ka, (b, h, w, cin), 0, 256,
+                           jnp.int32).astype(jnp.uint8)
+    m0 = 0.05
+    mul = jnp.full((cin,), m0, jnp.float32)
+    ones = jnp.ones((cin,), jnp.float32)
+    div = jax.random.uniform(km, (cout,), jnp.float32, 0.5, 1.5)
+    bias = jax.random.normal(km, (cout,), jnp.float32)
+    y = conv_ref.w1a8_conv3x3_ref(a, wp, cin, mul, div, bias)
+    step = float(jnp.max(jnp.abs(y))) / 255.0
+    base = KernelConfig(op="conv3x3_pool", accum="popcount", out_step=step,
+                        interpret=True)
+    y_pc = conv_ops.w1a8_conv3x3_pool(a, wp, mul, div, bias, cin=cin,
+                                      config=base.replace(fused=True))
+    y_dot = conv_ops.w1a8_conv3x3_pool(
+        a, wp, ones, div * m0, bias, cin=cin,
+        config=base.replace(fused=True, accum="dot"))
+    y_unf = conv_ops.w1a8_conv3x3_pool(a, wp, mul, div, bias, cin=cin,
+                                       config=base.replace(fused=False))
+    assert y_pc.dtype == jnp.uint8
+    assert y_pc.shape == (b, h // 2, w // 2, cout)
+    assert np.array_equal(np.asarray(y_pc), np.asarray(y_dot))
+    assert np.array_equal(np.asarray(y_pc), np.asarray(y_unf))
+
+
 def test_fused_conv_pool_matches_unfused():
     """Paper §5.2 Post+MaxPool fusion: one kernel == conv→requant→pool."""
     from repro.kernels.w1a8_conv.fused_pool import w1a8_conv3x3_pool2

@@ -242,6 +242,36 @@ def test_int8_wire_permute_roundtrip_within_envelope(x, mag, flip):
         assert err <= envelope * (1 + 1e-6), (row, err, envelope)
 
 
+@settings(deadline=None, max_examples=25)
+@given(hnp.arrays(np.float32, (4, 64),
+                  elements=st.floats(-4, 4, width=32, allow_subnormal=False)),
+       st.sampled_from([1e-6, 1e-3, 1.0, 1e3, 1e6]),
+       st.booleans(), st.booleans())
+def test_b1_roundtrip_sign_exact_alpha_clamped(x, mag, flip, per_slice):
+    """The b1 activation wire (QTensor.quantize_b1 → dequantize): signs
+    survive the round trip exactly (x̂ = sign(x)·α with the x ≥ 0 → +1
+    packing convention), |x̂| ≡ α = mean|x| (per tensor, or per row under
+    per_slice=True) across six orders of magnitude and global sign flips,
+    and an all-zero row — forced into every example — hits the 1e-20 α
+    clamp instead of NaN-poisoning the dequantize."""
+    from repro.core.qtensor import QTensor
+    x = x * np.float32(mag) * (np.float32(-1.0) if flip else np.float32(1.0))
+    x[1] = 0.0                                    # guaranteed all-zero row
+    qt = QTensor.quantize_b1(jnp.asarray(x), axis=-1, per_slice=per_slice)
+    xh = np.asarray(qt.dequantize())
+    alpha = np.asarray(qt.scale)
+    assert np.all(np.isfinite(xh)) and np.all(alpha >= 1e-20)
+    assert np.array_equal(np.sign(xh), np.where(x >= 0, 1.0, -1.0))
+    np.testing.assert_array_equal(np.abs(xh), np.broadcast_to(alpha, xh.shape))
+    want = np.abs(x).mean(axis=-1, keepdims=True) if per_slice \
+        else np.abs(x).mean()
+    np.testing.assert_allclose(alpha, np.maximum(want, 1e-20).astype(
+        np.float32), rtol=1e-5)
+    if per_slice:                                 # the clamp, observably
+        assert alpha.reshape(-1)[1] == np.float32(1e-20)
+        assert np.abs(xh[1]).max() <= 1e-20
+
+
 @settings(deadline=None, max_examples=8)
 @given(st.integers(2, 12), st.integers(0, 50))
 def test_nms_kept_boxes_are_mutually_distant(n, seed):
